@@ -1,0 +1,45 @@
+"""Quickstart: the paper's pipeline end-to-end in ~2 minutes.
+
+1. sample synthetic NAS architectures (paper §4.3.2),
+2. profile per-op + end-to-end latency on this machine (the "device"),
+3. train per-op-type predictors (paper §4.2),
+4. predict end-to-end latency of unseen architectures — the exact
+   NAS-time use case — and report MAPE,
+5. deduce GPU-delegate kernels (fusion + selection) for one arch.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.dataset import build_dataset, fit_predictor_bank, evaluate_bank, synthetic_graphs
+from repro.core.fusion import fuse_graph
+from repro.core.profiler import DeviceSetting, ProfileSession
+from repro.core.selection import apply_selection, get_device
+
+
+def main() -> None:
+    print("== 1-2. sample + profile 30 synthetic NAS architectures ==")
+    graphs = synthetic_graphs(30, resolution=32)
+    ds = build_dataset(graphs, DeviceSetting("cpu_f32", "float32", "op_by_op"),
+                       session=ProfileSession(repeats=2, inner=3))
+    print(f"profiled {len(ds.archs)} archs; e2e range "
+          f"{1e3 * ds.e2e().min():.2f}–{1e3 * ds.e2e().max():.2f} ms")
+
+    print("\n== 3-4. train GBDT per-op predictors on 24, test on 6 ==")
+    bank = fit_predictor_bank(ds, "gbdt", train_idx=list(range(24)),
+                              overhead_model="affine")
+    res = evaluate_bank(ds, bank, test_idx=list(range(24, 30)))
+    print(f"end-to-end latency MAPE on unseen archs: {100 * res['e2e_mape']:.1f}%")
+    for t, m in sorted(res["per_op_mape"].items()):
+        print(f"  {t:16s} MAPE {100 * m:5.1f}%")
+
+    print("\n== 5. kernel deduction for arch #0 on a Mali-class GPU ==")
+    g = graphs[0]
+    groups, _ = fuse_graph(g)
+    sel = apply_selection(g, get_device("mali_g76"))
+    print(f"ops: {g.num_ops()}  → kernels after fusion: {len(groups)}")
+    print(f"kernel mix after selection: {sel.op_type_counts()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — latency-predicting multi-pod JAX training/serving framework.
+
+Reproduction of *Inference Latency Prediction at the Edge* (Li,
+Paolieri, Golubchik, 2022) + a TPU-native production framework built
+around it.  See DESIGN.md for the map.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,163 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic-reshard on load.
+
+Layout per step:  <dir>/step_<n>/arrays.npz + manifest.json
+Protocol: write to `step_<n>.tmp/`, fsync, atomic `os.replace` to the
+final name, then update `latest` marker.  A crash mid-write leaves only
+a `.tmp` dir, which restore ignores — the previous checkpoint stays
+valid (restart-safety).
+
+Arrays are saved UNSHARDED (gathered); on restore they are placed with
+whatever shardings the (possibly different-sized, elastic) new mesh
+prescribes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.utils.logging import get_logger
+from repro.utils.tree import flatten_with_paths
+
+log = get_logger("repro.checkpoint")
+
+
+def _unflatten(flat: Dict[str, np.ndarray], treedef_paths) -> Any:
+    return flat  # callers reconstruct via restore_tree below
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._queue: "queue.Queue[Optional[Tuple[int, dict, dict]]]" = queue.Queue(2)
+        self._async = async_save
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        if async_save:
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+
+    # -- save ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, metadata: Optional[Dict[str, Any]] = None,
+             *, block: bool = False) -> None:
+        if self._error:
+            raise RuntimeError("async checkpoint worker failed") from self._error
+        flat = flatten_with_paths(tree)
+        # Device → host (gather): np.asarray materializes the full array.
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        meta = dict(metadata or {})
+        meta["step"] = step
+        meta["time"] = time.time()
+        if self._async:
+            self._queue.put((step, host, meta))
+            if block:
+                self._queue.join()
+        else:
+            self._write(step, host, meta)
+
+    def wait(self) -> None:
+        if self._async:
+            self._queue.join()
+        if self._error:
+            raise RuntimeError("async checkpoint worker failed") from self._error
+
+    def _run(self) -> None:
+        while True:
+            item = self._queue.get()
+            try:
+                if item is None:
+                    return
+                self._write(*item)
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._error = e
+                log.error("checkpoint write failed: %s", e)
+            finally:
+                self._queue.task_done()
+
+    def _write(self, step: int, host: Dict[str, np.ndarray],
+               meta: Dict[str, Any]) -> None:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"keys": sorted(host.keys()), **meta}, f)
+        # fsync the manifest so the rename publishes complete data.
+        with open(os.path.join(tmp, "manifest.json")) as f:
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        log.info("checkpoint step %d written (%d arrays)", step, len(host))
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.directory, name, "manifest.json")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None,
+                target: Any = None, shardings: Any = None
+                ) -> Tuple[Any, Dict[str, Any]]:
+        """Restore into the structure of `target` (a pytree of arrays or
+        ShapeDtypeStructs).  With `shardings`, device_put per leaf —
+        elastic restarts reshard here."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        if target is None:
+            return dict(data), meta
+        flat_target = flatten_with_paths(target)
+        missing = set(flat_target) - set(data.files)
+        if missing:
+            raise KeyError(f"checkpoint missing arrays: {sorted(missing)[:5]}...")
+        flat_shard = flatten_with_paths(shardings) if shardings is not None else {}
+
+        from repro.utils.tree import _path_str as _p_shared
+
+        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+        new_leaves = []
+        for kp, leaf in leaves_paths:
+            key = "/".join(_p_shared(p) for p in kp)
+            arr = data[key]
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            sh = flat_shard.get(key)
+            new_leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), meta
+
+    def close(self) -> None:
+        if self._async and self._worker is not None:
+            self._queue.put(None)
+            self._worker.join(timeout=30)
+
+

@@ -1,0 +1,6 @@
+"""Architecture + shape configs (assignment table)."""
+from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape, shape_applicable
+from repro.configs.registry import ARCHS, all_cells, get_arch
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "ARCHS",
+           "get_arch", "all_cells", "shape_applicable"]

@@ -1,0 +1,19 @@
+"""starcoder2-15b [dense]: 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152 — GQA + RoPE, 2-matrix GELU MLP [arXiv:2402.19173; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    qkv_bias=True,
+    mlp_kind="gelu",
+    act="gelu",
+    rope_theta=1e5,
+)

@@ -1,0 +1,5 @@
+"""The paper's contribution: operation-wise latency prediction.
+
+IR + featurizers + fusion/selection deduction + profiler + NAS space +
+predictors + composition.  See DESIGN.md §3.
+"""

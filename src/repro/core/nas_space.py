@@ -1,0 +1,266 @@
+"""Synthetic NAS space for the training dataset (paper §4.3.2, Fig. 12).
+
+Architectures: 9 building blocks; width/height halves after blocks
+1, 3, 5, 7, 9; then a 1×1 conv, global mean, and an FC to 1000 classes.
+Block types chosen uniformly at random:
+
+  (1) convolution (k ∈ {3,5,7}; optionally grouped, group count 4k,
+      1 ≤ k ≤ 16, restricted to divisors of in/out channels);
+  (2) depthwise-separable convolution (k ∈ {3,5,7});
+  (3) linear bottleneck (k ∈ {3,5,7}, expansion ∈ {1,3,6},
+      optional Squeeze-and-Excite);
+  (4) average or max pooling (pool size ∈ {1,3}), with a 1×1 projection
+      when the sampled output channels differ from the input's (pooling
+      alone cannot realize the sampled Cᵢ; noted deviation);
+  (5) split (2, 3 or 4) → element-wise op per branch → concat (output
+      channels = input channels for divisibility; noted deviation).
+
+Output channels: C₁–C₅ ~ U[8,80], C₆–C₉ ~ U[80,400], C₁₀ ~ U[1200,1800]
+(scaled by ``channel_scale`` to fit the 1-core CPU measurement budget;
+the paper measures on phones at 224×224 — we default to 32×32).
+
+Stride-2 convolutions emit an explicit `pad` op + VALID conv with
+probability 0.5, mirroring TFLite graph exports (and populating the
+paper's `Padding` op category).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ir import OpGraph
+
+EW_KINDS = ("abs", "square", "sqrt", "exp", "neg")
+ACTS = ("relu", "relu6", "hswish")
+
+
+@dataclass
+class NASSpaceConfig:
+    resolution: int = 32
+    num_blocks: int = 9
+    halve_after: Tuple[int, ...] = (1, 3, 5, 7, 9)   # 1-indexed block ids
+    channel_scale: float = 1.0
+    classes: int = 1000
+    explicit_pad_prob: float = 0.5
+
+
+def _cdiv(a: int, b: int) -> int:
+    return max(1, (a + b - 1) // b)
+
+
+def _rint(rng: np.random.Generator, lo: int, hi: int, scale: float) -> int:
+    v = int(rng.integers(lo, hi + 1))
+    return max(4, int(round(v * scale)))
+
+
+def _pad_then_valid(g: OpGraph, x: int, k: int, rng: np.random.Generator,
+                    cfg: NASSpaceConfig) -> Tuple[int, str]:
+    """Maybe emit explicit pad (stride-2 TFLite style); return (tensor, padding)."""
+    if rng.random() >= cfg.explicit_pad_prob:
+        return x, "SAME"
+    shape = g.tensor(x).shape
+    h, w = shape[1], shape[2]
+    pad_total = max(k - 2, 0)
+    if h + pad_total < k or w + pad_total < k:
+        return x, "SAME"   # kernel would not fit the padded map
+    lo, hi = pad_total // 2, pad_total - pad_total // 2
+    if pad_total == 0:
+        return x, "VALID"
+    (y,) = g.add_op(
+        "pad", [x],
+        [(shape[0], h + pad_total, w + pad_total, shape[3])],
+        {"paddings": ((0, 0), (lo, hi), (lo, hi), (0, 0))},
+    )
+    return y, "VALID"
+
+
+def _conv_block(g: OpGraph, x: int, out_c: int, stride: int,
+                rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+    shape = g.tensor(x).shape
+    in_c = shape[-1]
+    k = int(rng.choice([3, 5, 7]))
+    groups = 1
+    if rng.random() < 0.3:  # "optionally grouped"
+        cand = [4 * i for i in range(1, 17) if in_c % (4 * i) == 0 and out_c % (4 * i) == 0]
+        if cand:
+            groups = int(rng.choice(cand))
+    padding = "SAME"
+    if stride == 2:
+        x, padding = _pad_then_valid(g, x, k, rng, cfg)
+        shape = g.tensor(x).shape
+    oh = _cdiv(shape[1], stride) if padding != "VALID" else max(1, (shape[1] - k) // stride + 1)
+    ow = _cdiv(shape[2], stride) if padding != "VALID" else max(1, (shape[2] - k) // stride + 1)
+    op = "grouped_conv2d" if groups > 1 else "conv2d"
+    act = str(rng.choice(ACTS))
+    # relu/relu6 are converter-fused into the conv (TFLite behaviour);
+    # composite activations (hswish) stay separate graph nodes and are
+    # candidates for Alg. C.1 fusion on GPU-class devices.
+    conv_act = act if act in ("relu", "relu6") else None
+    (y,) = g.add_op(
+        op, [x], [(shape[0], oh, ow, out_c)],
+        {"kernel_h": k, "kernel_w": k, "stride": stride, "groups": groups,
+         "act": conv_act, "padding": padding},
+    )
+    if conv_act is None:
+        (y,) = g.add_op("activation", [y], [(shape[0], oh, ow, out_c)], {"act": act})
+    return y
+
+
+def _dwsep_block(g: OpGraph, x: int, out_c: int, stride: int,
+                 rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+    shape = g.tensor(x).shape
+    in_c = shape[-1]
+    k = int(rng.choice([3, 5, 7]))
+    oh, ow = _cdiv(shape[1], stride), _cdiv(shape[2], stride)
+    (y,) = g.add_op(
+        "dwconv2d", [x], [(shape[0], oh, ow, in_c)],
+        {"kernel_h": k, "kernel_w": k, "stride": stride, "act": "relu"},
+    )
+    (y,) = g.add_op(
+        "conv2d", [y], [(shape[0], oh, ow, out_c)],
+        {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1, "act": "relu"},
+    )
+    return y
+
+
+def _se_module(g: OpGraph, x: int, rng: np.random.Generator) -> int:
+    """Squeeze-and-Excite: mean → FC(C/4) → relu → FC(C) → sigmoid → mul."""
+    shape = g.tensor(x).shape
+    c = shape[-1]
+    mid = max(4, c // 4)
+    (s,) = g.add_op("mean", [x], [(shape[0], c)], {"kernel_h": shape[1], "kernel_w": shape[2]})
+    (s,) = g.add_op("fully_connected", [s], [(shape[0], mid)], {"act": "relu"})
+    (s,) = g.add_op("fully_connected", [s], [(shape[0], c)], {})
+    # LOGISTIC is a separate TFLite node — fusable by Alg. C.1.
+    (s,) = g.add_op("activation", [s], [(shape[0], c)], {"act": "sigmoid"})
+    # Broadcast-mul back over the spatial map.
+    (s,) = g.add_op("elementwise", [x, s], [shape], {"ew_kind": "mul"})
+    return s
+
+
+def _bottleneck_block(g: OpGraph, x: int, out_c: int, stride: int,
+                      rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+    shape = g.tensor(x).shape
+    in_c = shape[-1]
+    k = int(rng.choice([3, 5, 7]))
+    expand = int(rng.choice([1, 3, 6]))
+    use_se = bool(rng.random() < 0.5)
+    mid_c = in_c * expand
+    h = x
+    if expand != 1:
+        (h,) = g.add_op(
+            "conv2d", [h], [(shape[0], shape[1], shape[2], mid_c)],
+            {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1, "act": "relu6"},
+        )
+    oh, ow = _cdiv(shape[1], stride), _cdiv(shape[2], stride)
+    (h,) = g.add_op(
+        "dwconv2d", [h], [(shape[0], oh, ow, mid_c)],
+        {"kernel_h": k, "kernel_w": k, "stride": stride, "act": "relu6"},
+    )
+    if use_se:
+        h = _se_module(g, h, rng)
+    (h,) = g.add_op(
+        "conv2d", [h], [(shape[0], oh, ow, out_c)],
+        {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1},
+    )
+    if stride == 1 and out_c == in_c:
+        (h,) = g.add_op("elementwise", [h, x], [(shape[0], oh, ow, out_c)],
+                        {"ew_kind": "add"})
+    return h
+
+
+def _pool_block(g: OpGraph, x: int, out_c: int, stride: int,
+                rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+    shape = g.tensor(x).shape
+    in_c = shape[-1]
+    k = int(rng.choice([1, 3]))
+    kind = "pool_avg" if rng.random() < 0.5 else "pool_max"
+    oh, ow = _cdiv(shape[1], stride), _cdiv(shape[2], stride)
+    (y,) = g.add_op(
+        kind, [x], [(shape[0], oh, ow, in_c)],
+        {"kernel_h": k, "kernel_w": k, "stride": stride},
+    )
+    if out_c != in_c:  # 1×1 projection to realize the sampled Cᵢ
+        (y,) = g.add_op(
+            "conv2d", [y], [(shape[0], oh, ow, out_c)],
+            {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1},
+        )
+    return y
+
+
+def _split_block(g: OpGraph, x: int, out_c: int, stride: int,
+                 rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+    shape = g.tensor(x).shape
+    in_c = shape[-1]
+    if stride == 2:  # halve spatially first (split has no stride)
+        (x,) = g.add_op(
+            "pool_max", [x], [(shape[0], _cdiv(shape[1], 2), _cdiv(shape[2], 2), in_c)],
+            {"kernel_h": 3, "kernel_w": 3, "stride": 2},
+        )
+        shape = g.tensor(x).shape
+    divisors = [n for n in (2, 3, 4) if in_c % n == 0]
+    if not divisors:
+        return _conv_block(g, x, out_c, 1, rng, cfg)
+    n = int(rng.choice(divisors))
+    part_c = in_c // n
+    parts = g.add_op(
+        "split", [x], [(shape[0], shape[1], shape[2], part_c)] * n,
+        {"num_splits": n, "axis": -1},
+    )
+    outs = []
+    for pt in parts:
+        kind = str(rng.choice(EW_KINDS))
+        (o,) = g.add_op("elementwise", [pt],
+                        [(shape[0], shape[1], shape[2], part_c)],
+                        {"ew_kind": kind})
+        outs.append(o)
+    (y,) = g.add_op("concat", outs, [(shape[0], shape[1], shape[2], in_c)],
+                    {"axis": -1})
+    if out_c != in_c:
+        (y,) = g.add_op(
+            "conv2d", [y], [(shape[0], shape[1], shape[2], out_c)],
+            {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1},
+        )
+    return y
+
+
+_BLOCKS = (_conv_block, _dwsep_block, _bottleneck_block, _pool_block, _split_block)
+
+
+def sample_architecture(seed: int, cfg: Optional[NASSpaceConfig] = None) -> OpGraph:
+    """Sample one synthetic NA (deterministic in `seed`)."""
+    cfg = cfg or NASSpaceConfig()
+    rng = np.random.default_rng(seed)
+    g = OpGraph(f"nas_{seed}")
+    x = g.add_input((1, cfg.resolution, cfg.resolution, 3))
+    # Per paper Fig. 12: C1..C5 ~ U[8,80], C6..C9 ~ U[80,400].
+    chans = [
+        _rint(rng, 8, 80, cfg.channel_scale) for _ in range(5)
+    ] + [
+        _rint(rng, 80, 400, cfg.channel_scale) for _ in range(4)
+    ]
+    for i in range(cfg.num_blocks):
+        stride = 2 if (i + 1) in cfg.halve_after else 1
+        block = _BLOCKS[int(rng.integers(0, len(_BLOCKS)))]
+        x = block(g, x, chans[i], stride, rng, cfg)
+    # Head: 1×1 conv to C10, global mean, FC to `classes`.
+    c10 = _rint(rng, 1200, 1800, cfg.channel_scale)
+    shape = g.tensor(x).shape
+    (x,) = g.add_op(
+        "conv2d", [x], [(shape[0], shape[1], shape[2], c10)],
+        {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1, "act": "relu"},
+    )
+    (x,) = g.add_op("mean", [x], [(shape[0], c10)],
+                    {"kernel_h": shape[1], "kernel_w": shape[2]})
+    (x,) = g.add_op("fully_connected", [x], [(shape[0], cfg.classes)], {})
+    g.mark_output(x)
+    g.validate()
+    return g
+
+
+def sample_dataset(n: int, cfg: Optional[NASSpaceConfig] = None,
+                   seed0: int = 0) -> List[OpGraph]:
+    return [sample_architecture(seed0 + i, cfg) for i in range(n)]

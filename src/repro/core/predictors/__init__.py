@@ -1,0 +1,23 @@
+"""Per-operation latency predictors (paper §4.2): Lasso, RF, GBDT, MLP."""
+from repro.core.predictors.base import (
+    PREDICTORS,
+    Predictor,
+    Standardizer,
+    cross_val_mape,
+    grid_search,
+    relative_weights,
+)
+from repro.core.predictors.gbdt import GBDTPredictor, fit_gbdt_with_cv
+from repro.core.predictors.lasso import LassoPredictor
+from repro.core.predictors.mlp import MLPPredictor
+from repro.core.predictors.random_forest import RandomForestPredictor, fit_rf_with_cv
+
+__all__ = [
+    "PREDICTORS", "Predictor", "Standardizer", "cross_val_mape", "grid_search",
+    "relative_weights", "LassoPredictor", "RandomForestPredictor",
+    "GBDTPredictor", "MLPPredictor", "fit_rf_with_cv", "fit_gbdt_with_cv",
+]
+
+
+def make_predictor(name: str, **kwargs) -> Predictor:
+    return PREDICTORS.get(name)(**kwargs)

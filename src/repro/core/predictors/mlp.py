@@ -1,0 +1,122 @@
+"""MLP latency predictor (paper §4.2), in JAX.
+
+Architecture per the paper: 1–6 fully-connected layers, widths in
+{64,128,256,512}, ReLU, Adam, relative squared loss, 20% validation
+split, early stopping after 50 epochs without improvement.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predictors.base import PREDICTORS, Predictor
+
+
+def _init_params(key, sizes: Sequence[int], y_mean: float):
+    params = []
+    for i, (din, dout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (din, dout)) * jnp.sqrt(2.0 / din)
+        b = jnp.zeros(dout)
+        if i == len(sizes) - 2:
+            b = b + y_mean  # start predictions at the target mean
+        params.append((w, b))
+    return params
+
+
+def _forward(params, x):
+    h = x
+    for w, b in params[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = params[-1]
+    return (h @ w + b)[:, 0]
+
+
+def _loss(params, x, y, weight_decay):
+    pred = _forward(params, x)
+    rel = (pred - y) / jnp.maximum(y, 1e-12)
+    l2 = sum(jnp.sum(w * w) for w, _ in params)
+    return jnp.mean(rel * rel) + weight_decay * l2
+
+
+@partial(jax.jit, static_argnames=("lr", "weight_decay"))
+def _adam_epoch(params, opt_state, x, y, step, lr, weight_decay):
+    m, v = opt_state
+    g = jax.grad(_loss)(params, x, y, weight_decay)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(lambda mi, gi: b1 * mi + (1 - b1) * gi, m, g)
+    v = jax.tree_util.tree_map(lambda vi, gi: b2 * vi + (1 - b2) * gi * gi, v, g)
+    mh = jax.tree_util.tree_map(lambda mi: mi / (1 - b1 ** step), m)
+    vh = jax.tree_util.tree_map(lambda vi: vi / (1 - b2 ** step), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mi, vi: p - lr * mi / (jnp.sqrt(vi) + eps), params, mh, vh
+    )
+    return params, (m, v)
+
+
+@PREDICTORS.register("mlp")
+class MLPPredictor(Predictor):
+    name = "mlp"
+
+    def __init__(self, hidden_layers: int = 3, width: int = 128,
+                 lr: float = 5e-3, weight_decay: float = 1e-5,
+                 max_epochs: int = 1500, patience: int = 100,
+                 val_frac: float = 0.2, seed: int = 0):
+        super().__init__(hidden_layers=hidden_layers, width=width, lr=lr)
+        self.hidden_layers = int(hidden_layers)
+        self.width = int(width)
+        self.lr = float(lr)
+        self.weight_decay = float(weight_decay)
+        self.max_epochs = int(max_epochs)
+        self.patience = int(patience)
+        self.val_frac = float(val_frac)
+        self.seed = seed
+        self.params = None
+
+    def _fit(self, xs: np.ndarray, y: np.ndarray) -> None:
+        # Normalize the target scale (latencies are ~1e-6..1e-1 s): the
+        # relative loss is scale-invariant, but Adam optimizes far better
+        # with O(1) outputs.  Undone in _predict.
+        self.y_scale = float(np.mean(y)) or 1.0
+        y = y / self.y_scale
+        n, d = xs.shape
+        rng = np.random.default_rng(self.seed)
+        perm = rng.permutation(n)
+        n_val = max(1, int(self.val_frac * n)) if n >= 5 else 0
+        val_idx, tr_idx = perm[:n_val], perm[n_val:]
+        if len(tr_idx) == 0:
+            tr_idx = val_idx
+        xt, yt = jnp.asarray(xs[tr_idx]), jnp.asarray(y[tr_idx])
+        xv, yv = (jnp.asarray(xs[val_idx]), jnp.asarray(y[val_idx])) if n_val else (xt, yt)
+
+        sizes = [d] + [self.width] * self.hidden_layers + [1]
+        key = jax.random.PRNGKey(self.seed)
+        params = _init_params(key, sizes, float(np.mean(y)))
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        opt_state = (zeros, jax.tree_util.tree_map(jnp.zeros_like, params))
+
+        best_val, best_params, since = float("inf"), params, 0
+        for epoch in range(1, self.max_epochs + 1):
+            params, opt_state = _adam_epoch(
+                params, opt_state, xt, yt, epoch, self.lr, self.weight_decay
+            )
+            if epoch % 5 == 0 or epoch == self.max_epochs:
+                pv = _forward(params, xv)
+                val = float(jnp.mean(jnp.abs((pv - yv) / jnp.maximum(yv, 1e-12))))
+                if val < best_val - 1e-6:
+                    best_val, best_params, since = val, params, 0
+                else:
+                    since += 5
+                    if since >= self.patience:
+                        break
+        self.params = jax.tree_util.tree_map(np.asarray, best_params)
+
+    def _predict(self, xs: np.ndarray) -> np.ndarray:
+        if self.params is None:
+            raise RuntimeError("not fitted")
+        params = jax.tree_util.tree_map(jnp.asarray, self.params)
+        return np.asarray(_forward(params, jnp.asarray(xs))) * self.y_scale

@@ -1,0 +1,182 @@
+"""Wall-clock profiling of op graphs on the CPU device (paper §4.3.1).
+
+A `ProfileSession` measures
+  * per-op latency (cached by op signature — the paper profiles unique
+    configurations; dispatch amortized like its 256-kernel batches), and
+  * end-to-end latency (sequential dispatch, so framework overhead is
+    included — the T_overhead of §4.2 is estimated from the gap).
+
+Device settings play the role of the paper's 72 scenarios:
+  dtype ∈ {float32, int8}  ×  executor mode ∈ {op_by_op (CPU-like),
+  fused_groups (GPU-delegate-like)}  ×  simulated worker profiles
+  (multi-core composition happens in `distributed_model`, from these
+  single-worker measurements — same structure as the paper's per-core
+  measurements).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import GraphExecutor, make_array
+from repro.core.features import featurize
+from repro.core.ir import OpGraph, OpNode, op_signature
+from repro.utils.logging import get_logger
+from repro.utils.timing import time_callable
+
+log = get_logger("repro.profiler")
+
+
+@dataclass(frozen=True)
+class DeviceSetting:
+    """One measurement scenario (paper's device × setting grid)."""
+
+    name: str
+    dtype: str = "float32"         # float32 | int8
+    mode: str = "op_by_op"         # op_by_op (CPU) | fused_groups (GPU-like)
+
+    @property
+    def is_gpu_like(self) -> bool:
+        return self.mode == "fused_groups"
+
+
+DEFAULT_SETTINGS = (
+    DeviceSetting("cpu_f32", "float32", "op_by_op"),
+    DeviceSetting("cpu_int8", "int8", "op_by_op"),
+    DeviceSetting("gpu_f32", "float32", "fused_groups"),
+)
+
+
+@dataclass
+class OpRecord:
+    signature: str
+    op_type: str
+    feature_names: List[str]
+    features: List[float]
+    latency_s: float
+    fused: List[str] = field(default_factory=list)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "sig": self.signature, "type": self.op_type,
+            "names": self.feature_names, "x": self.features,
+            "y": self.latency_s, "fused": self.fused,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "OpRecord":
+        return cls(d["sig"], d["type"], d["names"], d["x"], d["y"], d.get("fused", []))
+
+
+@dataclass
+class ArchRecord:
+    name: str
+    e2e_s: float
+    op_sum_s: float
+    num_ops: int
+    num_kernels: int
+    ops: List[OpRecord]
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "name": self.name, "e2e": self.e2e_s, "op_sum": self.op_sum_s,
+            "num_ops": self.num_ops, "num_kernels": self.num_kernels,
+            "ops": [o.to_json() for o in self.ops],
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "ArchRecord":
+        return cls(d["name"], d["e2e"], d["op_sum"], d["num_ops"],
+                   d["num_kernels"], [OpRecord.from_json(o) for o in d["ops"]])
+
+
+class ProfileSession:
+    """Shares compiled callables + per-signature latencies across graphs."""
+
+    def __init__(self, *, warmup: int = 1, inner: int = 4, repeats: int = 3,
+                 e2e_inner: int = 2, e2e_repeats: int = 3):
+        self.fn_cache: Dict[str, Callable] = {}
+        self.latency_cache: Dict[str, float] = {}
+        self.warmup, self.inner, self.repeats = warmup, inner, repeats
+        self.e2e_inner, self.e2e_repeats = e2e_inner, e2e_repeats
+
+    # -- per-op ---------------------------------------------------------------
+    def _op_inputs(self, graph: OpGraph, node: OpNode, dtype: str) -> List[Any]:
+        arrs = []
+        for i, t in enumerate(node.inputs):
+            info = graph.tensor(t)
+            dt = "int8" if dtype == "int8" else info.dtype
+            arrs.append(jnp.asarray(make_array(info.shape, dt, seed=17 + i, scale=1.0)))
+        return arrs
+
+    def measure_op(self, graph: OpGraph, node: OpNode, setting: DeviceSetting) -> float:
+        sig = setting.dtype + ":" + op_signature(graph, node)
+        if sig in self.latency_cache:
+            return self.latency_cache[sig]
+        if setting.dtype == "int8":
+            from repro.quant.int8 import build_quant_op_fn as builder
+        else:
+            from repro.core.executor import build_op_fn as builder
+        jfn = self.fn_cache.get(sig)
+        if jfn is None:
+            fn, _ = builder(graph, node)
+            jfn = jax.jit(fn)
+            self.fn_cache[sig] = jfn
+        args = self._op_inputs(graph, node, setting.dtype)
+        # Adaptive amortization (paper §4.3.1 dispatches the same kernel
+        # 256×): size the inner loop so each repeat spans >=1.5 ms, which
+        # keeps measurement noise on µs-scale ops bounded.
+        est = time_callable(jfn, args, warmup=self.warmup, inner=2, repeats=1)
+        inner = int(np.clip(np.ceil(1.5e-3 / max(est, 1e-7)), self.inner, 256))
+        lat = time_callable(jfn, args, warmup=0, inner=inner, repeats=self.repeats)
+        self.latency_cache[sig] = lat
+        return lat
+
+    # -- whole graph ------------------------------------------------------------
+    def profile_graph(self, graph: OpGraph, setting: DeviceSetting) -> ArchRecord:
+        ex = GraphExecutor(graph, mode=setting.mode, dtype=setting.dtype,
+                           fn_cache=self.fn_cache)
+        g = ex.exec_graph
+        ops: List[OpRecord] = []
+        for node in g.nodes:
+            lat = self.measure_op(g, node, setting)
+            names, vals = featurize(g, node)
+            ops.append(OpRecord(
+                signature=op_signature(g, node),
+                op_type=node.op_type,
+                feature_names=list(names),
+                features=[float(v) for v in vals],
+                latency_s=lat,
+                fused=list(node.fused),
+            ))
+        inputs = ex.example_inputs()
+        # CPU-like settings: strictly sequential (TFLite interpreter).
+        # GPU-like settings: stream dispatch (OpenCL command queue).
+        sync = not setting.is_gpu_like
+        e2e = time_callable(lambda *a: ex(*a, sync_per_op=sync), inputs,
+                            warmup=1, inner=self.e2e_inner, repeats=self.e2e_repeats)
+        return ArchRecord(
+            name=graph.name,
+            e2e_s=e2e,
+            op_sum_s=float(sum(o.latency_s for o in ops)),
+            num_ops=graph.num_ops(),
+            num_kernels=len(g.nodes),
+            ops=ops,
+        )
+
+    def profile_suite(self, graphs: Sequence[OpGraph], setting: DeviceSetting,
+                      progress_every: int = 10) -> List[ArchRecord]:
+        out = []
+        t0 = time.time()
+        for i, g in enumerate(graphs):
+            out.append(self.profile_graph(g, setting))
+            if (i + 1) % progress_every == 0:
+                log.info("[%s] profiled %d/%d archs (%.0fs, %d unique ops)",
+                         setting.name, i + 1, len(graphs), time.time() - t0,
+                         len(self.latency_cache))
+        return out

@@ -1,0 +1,15 @@
+"""Distributed runtime: sharding rules, train/serve steps, PP, elastic,
+straggler mitigation, gradient compression."""
+from repro.distributed.sharding import (
+    VARIANTS, batch_pspec, cache_shardings, input_shardings, param_pspec,
+    shard_params,
+)
+from repro.distributed.trainstep import (
+    TrainState, init_train_state, make_serve_step, make_train_step,
+)
+
+__all__ = [
+    "VARIANTS", "param_pspec", "shard_params", "input_shardings",
+    "cache_shardings", "batch_pspec", "TrainState", "init_train_state",
+    "make_train_step", "make_serve_step",
+]

@@ -1,0 +1,68 @@
+"""Mesh-aware activation sharding constraints (safe no-ops off-mesh).
+
+Helpers models can call unconditionally: they apply
+`with_sharding_constraint` only when an ambient mesh with the needed
+axes is active (jax.set_mesh), so CPU unit tests and single-device runs
+are untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+U = P.UNCONSTRAINED
+
+
+def _mesh_axes() -> tuple:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        return ()
+    if mesh is None or getattr(mesh, "empty", False):
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def _axes_of(spec: P) -> set:
+    out = set()
+    for part in spec:
+        if part is None or part is U:
+            continue
+        if isinstance(part, (tuple, list)):
+            out.update(part)
+        else:
+            out.add(part)
+    return out
+
+
+def constrain(x: Any, spec: P) -> Any:
+    """with_sharding_constraint iff the ambient mesh has the spec's axes."""
+    axes = _mesh_axes()
+    if not axes or not _axes_of(spec).issubset(axes):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_seq(x: Any, cfg) -> Any:
+    """Sequence parallelism: (b, s, d) activations sharded s→model."""
+    if not getattr(cfg, "seq_shard", False):
+        return x
+    return constrain(x, P(U, "model", U))
+
+
+def constrain_logits(logits: Any) -> Any:
+    """Pin logits to (batch over data axes, ..., vocab over model).
+
+    Without the explicit batch pin, GSPMD trades the batch sharding away
+    when it introduces the vocab sharding and the per-microbatch logits
+    replicate across the data axis (measured 0.6 GB f32 × live copies on
+    qwen2-72b).
+    """
+    axes = _mesh_axes()
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    if not batch or "model" not in axes:
+        return logits
+    spec = P(batch, *([U] * (logits.ndim - 2) + ["model"]))
+    return constrain(logits, spec)

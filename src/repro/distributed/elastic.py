@@ -1,0 +1,62 @@
+"""Elastic scaling + fault recovery orchestration.
+
+Recovery contract (1000+-node posture):
+  * any step's data batch is a pure function of (seed, step) — no data
+    state to restore;
+  * checkpoints are atomic and carry mesh metadata;
+  * on restart, `recover()` picks a mesh for the surviving device count
+    (`elastic_mesh_shape`), reshards the checkpoint onto it, and resumes
+    from the recorded step;
+  * batch shards that no longer divide evenly fall back to replication
+    (input_shardings handles it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.sharding import shard_params
+from repro.launch.mesh import elastic_mesh_shape, make_mesh
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.elastic")
+
+
+@dataclass
+class RecoveryPlan:
+    mesh: Any
+    step: int
+    resumed: bool
+
+
+def plan_mesh(n_devices: Optional[int] = None, *, model_parallel: int = 16,
+              pods: int = 1):
+    n = n_devices if n_devices is not None else jax.device_count()
+    shape, axes = elastic_mesh_shape(n, model_parallel=model_parallel, pods=pods)
+    return make_mesh(shape, axes)
+
+
+def recover(ckpt: CheckpointManager, target_state, *, mesh=None,
+            variant: str = "tp") -> Tuple[Any, RecoveryPlan]:
+    """Restore the latest valid checkpoint onto `mesh` (or a planned one).
+
+    `target_state` is a pytree of arrays/ShapeDtypeStructs giving the
+    expected structure (from init or eval_shape).
+    Returns (state, plan). plan.resumed=False when no checkpoint exists.
+    """
+    mesh = mesh if mesh is not None else plan_mesh()
+    step = ckpt.latest_step()
+    if step is None:
+        log.info("no checkpoint found; cold start on mesh %s", dict(mesh.shape))
+        return target_state, RecoveryPlan(mesh, 0, False)
+    shardings = shard_params(target_state, mesh, variant)
+    state, meta = ckpt.restore(step, target=target_state, shardings=shardings)
+    old_mesh = meta.get("mesh_shape")
+    if old_mesh and tuple(old_mesh) != tuple(mesh.devices.shape):
+        log.info("elastic reshard: checkpoint mesh %s → current %s",
+                 old_mesh, list(mesh.devices.shape))
+    log.info("resumed from step %d", meta["step"])
+    return state, RecoveryPlan(mesh, int(meta["step"]), True)

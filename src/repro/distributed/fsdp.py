@@ -1,0 +1,60 @@
+"""FSDP (ZeRO-3) per-layer gather for scanned layer stacks.
+
+The pathology: with weights sharded over `data` and layers executed by
+`lax.scan`, GSPMD hoists the all-gather OUT of the loop — the full
+model materializes (dry-run measured 415 GB/device temp on qwen2-72b
+train_4k, vs 16 GB HBM).
+
+The fix (what Megatron/MaxText do, expressed in JAX): keep the stacked
+weights fsdp-sharded in HBM; inside the scan body, cast the layer slice
+to the compute dtype and `with_sharding_constraint` it to the TP-only
+layout — forcing a PER-LAYER all-gather inside the while loop.  Peak
+unsharded weight footprint drops from whole-model to one layer, and the
+gather is bf16 (half the f32 wire bytes).
+
+Models call `gather_layer(lp, cfg)` at the top of every scan body; it
+is the identity unless `cfg.fsdp_gather` is set (the dry-run /
+launcher sets it when the fsdp variant is active).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import _path_str, param_pspec
+
+
+def gather_layer(layer_params: Any, cfg) -> Any:
+    """Gather the fsdp (data) dim of one layer's params, keep TP dims."""
+    if not getattr(cfg, "fsdp_gather", False):
+        return layer_params
+    compute = jnp.dtype(cfg.compute_dtype)
+
+    def one(key_path, leaf):
+        x = leaf.astype(compute) if jnp.issubdtype(leaf.dtype, jnp.floating) else leaf
+        spec = param_pspec(_path_str(key_path), x, "tp")
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    return jax.tree_util.tree_map_with_path(one, layer_params)
+
+
+def pin_layer_stack(stacked_params: Any, cfg) -> Any:
+    """Pin the STACKED layer weights to their fsdp spec before a scan.
+
+    Without this, the replicated spec `gather_layer` puts on the
+    per-iteration slice back-propagates through the loop's dynamic-slice
+    and GSPMD gathers the WHOLE stack outside the loop (415 GB/device on
+    qwen2-72b, measured).  Pinning the loop operand keeps the stack
+    sharded; only the slice reshards — one layer per iteration.
+    """
+    if not getattr(cfg, "fsdp_gather", False):
+        return stacked_params
+
+    def one(key_path, leaf):
+        spec = param_pspec(_path_str(key_path), leaf, "fsdp")
+        return jax.lax.with_sharding_constraint(leaf, spec)
+
+    return jax.tree_util.tree_map_with_path(one, stacked_params)

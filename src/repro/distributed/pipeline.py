@@ -1,0 +1,117 @@
+"""Pipeline parallelism: GPipe-style microbatching over a `pipe` mesh axis.
+
+Stages hold contiguous layer slices (params stacked per stage under
+shard_map); activations flow stage→stage via `jax.lax.ppermute`.  The
+schedule runs M + S − 1 ticks (M microbatches, S stages): each tick,
+every stage processes the microbatch it holds and permutes the result
+forward — the standard bubble of (S−1)/(M+S−1).
+
+Used as an OPTIONAL parallelism mode (``--pipeline-stages``): the
+baseline dry-run meshes use DP×TP where the per-layer weights fit; PP
+becomes necessary when a single layer's weights exceed HBM or for
+latency-bound decode — both noted in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = Any
+
+
+def pipeline_forward(
+    layer_fn: Callable[[Params, jnp.ndarray], jnp.ndarray],
+    stage_params: Params,
+    x_micro: jnp.ndarray,
+    *,
+    mesh,
+    axis: str = "pipe",
+) -> jnp.ndarray:
+    """Run microbatches through pipeline stages under shard_map.
+
+    stage_params: pytree with leading [stages, layers_per_stage, ...]
+    x_micro: (microbatches, mb_size, seq, d) activations (already embedded)
+    Returns activations after all stages, same shape.
+    """
+    n_stages = mesh.shape[axis]
+
+    def stage_body(params_local, x_local):
+        # params_local: [1, layers_per_stage, ...]; x_local: (M, mb, s, d)
+        params_local = jax.tree_util.tree_map(lambda a: a[0], params_local)
+        m = x_local.shape[0]
+        stage = jax.lax.axis_index(axis)
+        n_ticks = m + n_stages - 1
+
+        def run_stage(act):
+            def body(a, lp):
+                return layer_fn(lp, a), None
+            out, _ = jax.lax.scan(body, act, params_local)
+            return out
+
+        buf = jnp.zeros_like(x_local[0])
+        outputs = jnp.zeros_like(x_local)
+        # The loop-carried buffers become device-varying after the first
+        # ppermute; mark the initial zeros as varying over the pipe axis
+        # so the scan carry types match (new shard_map VMA semantics).
+        try:
+            buf = jax.lax.pcast(buf, (axis,), to="varying")
+            outputs = jax.lax.pcast(outputs, (axis,), to="varying")
+        except (AttributeError, TypeError):  # older jax: pvary
+            buf = jax.lax.pvary(buf, (axis,))
+            outputs = jax.lax.pvary(outputs, (axis,))
+
+        def tick(carry, t):
+            buf, outputs = carry
+            # Stage 0 ingests microbatch t (when valid); others use buf.
+            feed = jnp.where(t < m, t, 0)
+            inp = jnp.where(stage == 0, x_local[feed], buf)
+            out = run_stage(inp)
+            # Last stage records its finished microbatch (t - S + 1).
+            done = t - (n_stages - 1)
+            slot = jnp.clip(done, 0, m - 1)
+            record = jnp.logical_and(stage == n_stages - 1, done >= 0)
+            outputs = jax.lax.dynamic_update_index_in_dim(
+                outputs,
+                jnp.where(record, out, outputs[slot]),
+                slot, axis=0)
+            # Forward permute (ring): stage i → i+1.
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            buf = jax.lax.ppermute(out, axis, perm)
+            return (buf, outputs), None
+
+        (buf, outputs), _ = jax.lax.scan(tick, (buf, outputs), jnp.arange(n_ticks))
+        # Only the last stage holds real outputs; broadcast via masked psum
+        # (one-to-all is not a valid ppermute).
+        if n_stages > 1:
+            outputs = jax.lax.psum(
+                jnp.where(stage == n_stages - 1, outputs, jnp.zeros_like(outputs)),
+                axis)
+        return outputs
+
+    spec_params = P(axis)
+    fn = jax.shard_map(
+        stage_body, mesh=mesh,
+        in_specs=(jax.tree_util.tree_map(lambda _: spec_params, stage_params),
+                  P()),
+        out_specs=P(),
+    )
+    return fn(stage_params, x_micro)
+
+
+def split_layers_to_stages(layer_params: Params, n_stages: int) -> Params:
+    """[L, ...] stacked layers → [S, L/S, ...]."""
+    def reshape(a):
+        l = a.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return a.reshape((n_stages, l // n_stages) + a.shape[1:])
+    return jax.tree_util.tree_map(reshape, layer_params)
+
+
+def pipeline_bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """Analytical bubble overhead (S−1)/(M+S−1) — the §Perf napkin."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)

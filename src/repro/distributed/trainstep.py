@@ -1,0 +1,115 @@
+"""pjit train/serve steps: grad accumulation, compression, donation.
+
+`make_train_step` builds the jitted step for any `Model`:
+  * microbatch gradient accumulation (lax.scan) — overlaps compute with
+    the deferred psum (XLA hoists the reduction out of the scan: one
+    collective per step, the standard comm/compute overlap trick);
+  * optional int8 gradient compression with error feedback;
+  * buffers donated (params/opt state update in place).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import (
+    CompressionState, compress_grads, compression_init,
+)
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import linear_warmup_cosine
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: AdamWState
+    comp: Optional[CompressionState]
+    step: jnp.ndarray
+
+
+def init_train_state(model, key, *, compression: bool = False) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        comp=compression_init(params) if compression else None,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    model,
+    *,
+    base_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10000,
+    weight_decay: float = 0.1,
+    microbatches: int = 1,
+    compression: bool = False,
+) -> Callable[[TrainState, Dict[str, Any]], Tuple[TrainState, Dict[str, Any]]]:
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb):
+                # Re-pin the batch dim: the (B,…)→(M, B/M,…) reshape makes
+                # the data sharding ambiguous and GSPMD can replicate the
+                # per-iteration slice (measured 13.4 GB/device of
+                # replicated VLM vision embeddings).
+                from repro.distributed.activations import constrain, _mesh_axes
+                from jax.sharding import PartitionSpec as P
+                da = tuple(a for a in ("pod", "data") if a in _mesh_axes())
+                if da:
+                    U = P.UNCONSTRAINED
+                    mb = jax.tree_util.tree_map(
+                        lambda a: constrain(a, P(da, *([U] * (a.ndim - 1)))), mb)
+                gacc, lacc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss_sum), _ = jax.lax.scan(acc_body, (zeros, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+
+        comp_state = state.comp
+        if compression and comp_state is not None:
+            grads, comp_state = compress_grads(grads, comp_state)
+
+        lr = linear_warmup_cosine(state.step, base_lr=base_lr,
+                                  warmup_steps=warmup_steps,
+                                  total_steps=total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, lr=lr, weight_decay=weight_decay)
+        new_state = TrainState(new_params, new_opt, comp_state, state.step + 1)
+        out_metrics = {"loss": loss, "lr": lr, **opt_metrics, **metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_serve_step(model) -> Callable:
+    """Single decode step: (params, batch, cache) → (logits, cache)."""
+    def serve_step(params, batch, cache):
+        return model.decode_step(params, batch, cache)
+    return serve_step

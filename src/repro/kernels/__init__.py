@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated in interpret mode vs ref.py oracles).
+
+Import `repro.kernels.ops` for the jit'd wrappers; each kernel module
+documents its BlockSpec/VMEM design.
+"""

@@ -1,0 +1,120 @@
+"""Flash attention Pallas TPU kernel (VMEM-blocked online softmax).
+
+Design (TPU-native, not a CUDA port):
+  * grid = (batch·heads, q_blocks, kv_blocks) — the kv dimension is the
+    innermost (sequential on TPU), so the online-softmax running max /
+    denominator / accumulator live in VMEM scratch across kv steps;
+  * BlockSpecs tile Q/K/V as (block_q, head_dim) / (block_kv, head_dim)
+    VMEM windows; head_dim is the MXU lane dim (pad to 128 off-kernel);
+  * causal masking: fully-masked kv blocks are skipped via `pl.when`
+    (napkin math: halves compute on causal training shapes);
+  * f32 accumulation; bf16 in/out.
+
+VMEM budget @ block_q=block_kv=512, hd=128, bf16 in / f32 acc:
+  q (512·128·2) + k,v (2·512·128·2) + acc (512·128·4) + scores
+  (512·512·4) ≈ 1.7 MB ≪ 128 MB VMEM — ample room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = Any
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_scratch, l_scratch, acc_scratch,
+                  *, scale: float, causal: bool, block_q: int, block_kv: int,
+                  num_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    # Causal: skip kv blocks strictly above the diagonal.
+    run = (ki * block_kv <= qi * block_q + block_q - 1) if causal \
+        else (ki == ki)  # traced 'True'
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (bkv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scratch[...]                          # (bq, 1)
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # (bq, bkv)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scratch[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scratch[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scratch[...], 1e-30)
+        o_ref[0] = (acc_scratch[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False) -> Array:
+    """q,k,v: (b, s, h, d) with equal head counts (repeat GQA off-kernel).
+
+    Returns (b, s, h, d) in q.dtype.  Sequence lengths must divide by
+    the (auto-shrunk) block sizes; pad off-kernel otherwise.
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
+    scale = 1.0 / np.sqrt(hd)
+    nq, nkv = sq // block_q, skv // block_kv
+
+    # (b, s, h, d) → (b·h, s, d): heads become part of the parallel grid.
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * h, skv, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_kv=block_kv, num_kv_blocks=nkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,67 @@
+"""Grouped expert matmul (MoE GMM) Pallas kernel.
+
+The TPU analogue of the paper's `grouped_convolution_2d` insight
+(§3.2.2): a naive per-expert loop dispatches E kernels and strands the
+MXU on small work items; ONE grouped kernel keeps it busy.  The expert
+dim rides the grid; each (expert, C-block, F-block) cell runs a
+K-blocked matmul with an f32 VMEM accumulator.
+
+VMEM @ block_c=256, block_f=512, block_d=512 bf16:
+  x 256·512·2 + w 512·512·2 + acc 256·512·4 ≈ 1.3 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = Any
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scratch, *, num_d_blocks: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    x = x_ref[0].astype(jnp.float32)      # (block_c, block_d)
+    w = w_ref[0].astype(jnp.float32)      # (block_d, block_f)
+    acc_scratch[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(di == num_d_blocks - 1)
+    def _final():
+        o_ref[0] = acc_scratch[...].astype(o_ref.dtype)
+
+
+def moe_gmm(x: Array, w: Array, *, block_c: int = 256, block_f: int = 512,
+            block_d: int = 512, interpret: bool = False) -> Array:
+    """x: (e, c, d) × w: (e, d, f) → (e, c, f)."""
+    e, c, d = x.shape
+    e2, d2, f = w.shape
+    assert e == e2 and d == d2
+    block_c = min(block_c, c)
+    block_f = min(block_f, f)
+    block_d = min(block_d, d)
+    assert c % block_c == 0 and f % block_f == 0 and d % block_d == 0, \
+        (c, f, d, block_c, block_f, block_d)
+    grid = (e, c // block_c, f // block_f, d // block_d)
+    kernel = functools.partial(_gmm_kernel, num_d_blocks=grid[3])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda ei, ci, fi, di: (ei, ci, di)),
+            pl.BlockSpec((1, block_d, block_f), lambda ei, ci, fi, di: (ei, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda ei, ci, fi, di: (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

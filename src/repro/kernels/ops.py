@@ -1,0 +1,65 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On the CPU backend (this container) every kernel runs in interpret
+mode — the Python-level execution of the kernel body that validates
+correctness against ref.py.  On a TPU backend the same call sites
+compile the real Mosaic kernels.  `repro.core.selection` holds the
+rules for when the runtime picks these over the jnp twins.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import int8_matmul as _imm
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import winograd_conv as _wino
+
+Array = Any
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    block_q: int = 512, block_kv: int = 512) -> Array:
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("a_scale", "b_scale",
+                                   "block_m", "block_n", "block_k"))
+def int8_matmul(a_q: Array, b_q: Array, a_scale: float, b_scale: float,
+                *, block_m: int = 256, block_n: int = 256,
+                block_k: int = 512) -> Array:
+    return _imm.int8_matmul(a_q, b_q, float(a_scale), float(b_scale),
+                            block_m=block_m, block_n=block_n, block_k=block_k,
+                            interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_bh",))
+def ssd_scan(s_chunk: Array, decay: Array, *, block_bh: int = 8
+             ) -> Tuple[Array, Array]:
+    return _ssd.ssd_scan(s_chunk, decay, block_bh=block_bh,
+                         interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
+def moe_gmm(x: Array, w: Array, *, block_c: int = 256, block_f: int = 512,
+            block_d: int = 512) -> Array:
+    return _gmm.moe_gmm(x, w, block_c=block_c, block_f=block_f,
+                        block_d=block_d, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_k"))
+def winograd_conv2d(x: Array, w: Array, *, block_t: int = 128,
+                    block_k: int = 128) -> Array:
+    return _wino.winograd_conv2d(x, w, block_t=block_t, block_k=block_k,
+                                 interpret=_interpret())

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Array = Any
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0) -> Array:
+    """q,k,v: (b, s, h, d) same head count (GQA repeat done by caller)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def int8_matmul_ref(a_q: Array, b_q: Array, a_scale: float, b_scale: float) -> Array:
+    """a_q: (m, k) int8; b_q: (k, n) int8 → f32 (m, n)."""
+    acc = jnp.dot(a_q.astype(jnp.int32), b_q.astype(jnp.int32))
+    return acc.astype(jnp.float32) * (a_scale * b_scale)
+
+
+def ssd_scan_ref(s_chunk: Array, decay: Array) -> Tuple[Array, Array]:
+    """Inter-chunk SSD recurrence.
+
+    s_chunk: (nc, b, h, p, n) per-chunk input→state contributions;
+    decay:   (nc, b, h) per-chunk cumulative decay.
+    Returns (h_prev: (nc, b, h, p, n) state BEFORE each chunk,
+             h_final: (b, h, p, n)).
+    """
+    def body(hstate, inp):
+        s_c, dec = inp
+        out = hstate
+        hstate = hstate * dec[..., None, None] + s_c
+        return hstate, out
+
+    h0 = jnp.zeros(s_chunk.shape[1:], s_chunk.dtype)
+    h_final, h_prev = jax.lax.scan(body, h0, (s_chunk, decay))
+    return h_prev, h_final
+
+
+def moe_gmm_ref(x: Array, w: Array) -> Array:
+    """Grouped expert matmul: (e, c, d) × (e, d, f) → (e, c, f)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def winograd_conv_ref(x: Array, w: Array) -> Array:
+    """Ground truth for Winograd F(2×2,3×3): direct SAME conv, stride 1.
+
+    x: (b, h, w, c); w: (3, 3, c, k).
+    """
+    return lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def extract_winograd_tiles(x: Array) -> Array:
+    """(b,h,w,c) → overlapping 4×4 tiles (b·nt, 4, 4, c), stride 2, SAME pad."""
+    b, h, w, c = x.shape
+    nh, nw = (h + 1) // 2, (w + 1) // 2
+    xp = jnp.pad(x, ((0, 0), (1, 2 * nh - h + 1), (1, 2 * nw - w + 1), (0, 0)))
+    t = jnp.stack([xp[:, i:i + 2 * nh:2] for i in range(4)], axis=3)
+    t = jnp.stack([t[:, :, j:j + 2 * nw:2] for j in range(4)], axis=4)
+    return t.reshape(b * nh * nw, 4, 4, c)
+
+
+def assemble_winograd_tiles(y: Array, b: int, h: int, w: int) -> Array:
+    """(b·nt, 2, 2, k) → (b, h, w, k)."""
+    nh, nw = (h + 1) // 2, (w + 1) // 2
+    k = y.shape[-1]
+    y = y.reshape(b, nh, nw, 2, 2, k).transpose(0, 1, 3, 2, 4, 5)
+    return y.reshape(b, 2 * nh, 2 * nw, k)[:, :h, :w, :]

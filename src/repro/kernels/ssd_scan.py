@@ -1,0 +1,84 @@
+"""Inter-chunk SSD recurrence Pallas kernel (Mamba2 backbone hot loop).
+
+The chunked SSD algorithm (models/ssm.py) reduces the sequential part
+of Mamba2 to a short recurrence over per-chunk states:
+
+    h_c = decay_c · h_{c-1} + s_c          (state: (b, h, p, n))
+
+with `h_{c-1}` needed per chunk for the inter-chunk output term.  XLA
+lowers the lax.scan to per-step HBM round-trips of the state; this
+kernel keeps the running state resident in VMEM across the sequential
+chunk grid dimension and streams s_c/decay_c blocks through.
+
+State block per (head-block): (block_h, p·n) f32 = 8·64·128·4 = 256 KB
+— VMEM-resident for the whole scan; s_c blocks double-buffer on top.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = Any
+
+
+def _ssd_scan_kernel(s_ref, d_ref, hprev_ref, hfinal_ref, state_scratch,
+                     *, num_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scratch[...] = jnp.zeros_like(state_scratch)
+
+    state = state_scratch[...]                        # (bh_blk, p·n) f32
+    hprev_ref[:, 0, :] = state.astype(hprev_ref.dtype)  # state BEFORE chunk
+    dec = d_ref[:, 0, :].astype(jnp.float32)          # (bh_blk, 1)
+    s_c = s_ref[:, 0, :].astype(jnp.float32)          # (bh_blk, p·n)
+    state_scratch[...] = state * dec + s_c
+
+    @pl.when(ci == num_chunks - 1)
+    def _final():
+        hfinal_ref[...] = state_scratch[...].astype(hfinal_ref.dtype)
+
+
+def ssd_scan(s_chunk: Array, decay: Array, *, block_bh: int = 8,
+             interpret: bool = False) -> Tuple[Array, Array]:
+    """s_chunk: (nc, b, h, p, n); decay: (nc, b, h) →
+    (h_prev: (nc, b, h, p, n), h_final: (b, h, p, n)).
+
+    Implementation shape: fold (b, h) → BH rows and (p, n) → columns;
+    grid = (BH/block, nc) with nc sequential (innermost).
+    """
+    nc, b, h, p, n = s_chunk.shape
+    bh = b * h
+    block_bh = min(block_bh, bh)
+    assert bh % block_bh == 0, (bh, block_bh)
+    sr = s_chunk.reshape(nc, bh, p * n).transpose(1, 0, 2)   # (bh, nc, pn)
+    dr = decay.reshape(nc, bh, 1).transpose(1, 0, 2)          # (bh, nc, 1)
+
+    kernel = functools.partial(_ssd_scan_kernel, num_chunks=nc)
+    h_prev, h_final = pl.pallas_call(
+        kernel,
+        grid=(bh // block_bh, nc),
+        in_specs=[
+            pl.BlockSpec((block_bh, 1, p * n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((block_bh, 1, 1), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_bh, 1, p * n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((block_bh, p * n), lambda bi, ci: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, p * n), s_chunk.dtype),
+            jax.ShapeDtypeStruct((bh, p * n), s_chunk.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_bh, p * n), jnp.float32)],
+        interpret=interpret,
+    )(sr, dr)
+    h_prev = h_prev.transpose(1, 0, 2).reshape(nc, b, h, p, n)
+    h_final = h_final.reshape(b, h, p, n)
+    return h_prev, h_final

@@ -1,0 +1,112 @@
+"""Winograd F(2×2, 3×3) convolution Pallas kernel — the paper's §3.2.2
+kernel-selection study object, re-blocked for the MXU.
+
+TPU adaptation (vs TFLite's OpenCL workgroups):
+  * weights are pre-transformed offline: U = G·g·Gᵀ → (16, C, K) — as
+    TFLite does at model-compile time;
+  * input 4×4 tile extraction (im2winograd) runs in XLA (a strided
+    gather XLA handles well); the kernel receives tiles (T, 16, C);
+  * the kernel computes, per (tile-block, K-block), the 16 independent
+    (block_t, C)×(C, K) matmuls — MXU work with a 2.25× MAC reduction
+    vs direct conv — plus the B/A transforms as unrolled VPU adds;
+  * selection rule (_check_winograd_tpu): C,K ≥ 64 and ≥128 tiles so
+    the 16 matmuls keep the 128×128 MXU fed.
+
+VMEM @ block_t=128, C=K=128: tiles 16·128·128·4 + U 16·128·128·4 +
+acc 4·128·128·4 ≈ 2.3 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import assemble_winograd_tiles, extract_winograd_tiles
+
+Array = Any
+
+# Transform matrices (F(2x2, 3x3)).
+_B_T = np.array([[1, 0, -1, 0], [0, 1, 1, 0], [0, -1, 1, 0], [0, 1, 0, -1]],
+                np.float32)
+_G = np.array([[1, 0, 0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0, 0, 1]],
+              np.float32)
+_A_T = np.array([[1, 1, 1, 0], [0, 1, -1, -1]], np.float32)
+
+
+def transform_weights(w: Array) -> Array:
+    """(3,3,C,K) → (16, C, K): U = G g Gᵀ, flattened over the 4×4 grid."""
+    u = jnp.einsum("ij,jkcq,lk->ilcq", jnp.asarray(_G), w.astype(jnp.float32),
+                   jnp.asarray(_G))
+    return u.reshape(16, *u.shape[2:])
+
+
+def _bt_rows(d):
+    """Bᵀ·d along an axis-of-4 given as a list [d0..d3] → list of 4."""
+    return [d[0] - d[2], d[1] + d[2], d[2] - d[1], d[1] - d[3]]
+
+
+def _at_rows(m):
+    """Aᵀ·m along an axis-of-4 given as a list [m0..m3] → list of 2."""
+    return [m[0] + m[1] + m[2], m[1] - m[2] - m[3]]
+
+
+def _winograd_kernel(t_ref, u_ref, o_ref, *, block_t: int):
+    # t_ref: (block_t, 16, C); u_ref: (16, C, block_k); o_ref: (block_t, 4, block_k)
+    d = t_ref[...].astype(jnp.float32)
+    c = d.shape[-1]
+    d4 = d.reshape(block_t, 4, 4, c)
+    # Input transform V = Bᵀ d B — unrolled VPU adds (B entries ∈ {0,±1}).
+    rows = _bt_rows([d4[:, i] for i in range(4)])             # 4×(t,4,c)
+    v_rows = [_bt_rows([r[:, j] for j in range(4)]) for r in rows]
+    v = jnp.stack([jnp.stack(vr, axis=1) for vr in v_rows], axis=1)  # (t,4,4,c)
+    v = v.reshape(block_t, 16, c)
+    # 16 independent MXU matmuls: M[n] = V[:, n, :] @ U[n]
+    u = u_ref[...].astype(jnp.float32)                        # (16, c, k)
+    m = jax.lax.dot_general(
+        v.transpose(1, 0, 2), u,
+        (((2,), (1,)), ((0,), (0,))),                         # batch dim = 16
+        preferred_element_type=jnp.float32)                   # (16, t, k)
+    k = m.shape[-1]
+    m4 = m.transpose(1, 0, 2).reshape(block_t, 4, 4, k)
+    # Output transform Y = Aᵀ M A — unrolled adds.
+    mrows = _at_rows([m4[:, i] for i in range(4)])            # 2×(t,4,k)
+    y_rows = [_at_rows([r[:, j] for j in range(4)]) for r in mrows]
+    y = jnp.stack([jnp.stack(yr, axis=1) for yr in y_rows], axis=1)  # (t,2,2,k)
+    o_ref[...] = y.reshape(block_t, 4, k).astype(o_ref.dtype)
+
+
+def winograd_conv2d(x: Array, w: Array, *, block_t: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> Array:
+    """Winograd F(2×2,3×3) SAME conv, stride 1. x: (b,h,w,c); w: (3,3,c,k)."""
+    b, h, w_, c = x.shape
+    k = w.shape[-1]
+    u = transform_weights(w)                            # (16, c, k) offline
+    tiles = extract_winograd_tiles(x)                   # (T, 4, 4, c)
+    t = tiles.shape[0]
+    block_t = min(block_t, t)
+    block_k = min(block_k, k)
+    pad_t = (-t) % block_t
+    if pad_t:
+        tiles = jnp.pad(tiles, ((0, pad_t), (0, 0), (0, 0), (0, 0)))
+    tp = tiles.reshape(tiles.shape[0], 16, c)
+    assert k % block_k == 0, (k, block_k)
+    grid = (tp.shape[0] // block_t, k // block_k)
+    kernel = functools.partial(_winograd_kernel, block_t=block_t)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, 16, c), lambda ti, ki: (ti, 0, 0)),
+            pl.BlockSpec((16, c, block_k), lambda ti, ki: (0, 0, ki)),
+        ],
+        out_specs=pl.BlockSpec((block_t, 4, block_k), lambda ti, ki: (ti, 0, ki)),
+        out_shape=jax.ShapeDtypeStruct((tp.shape[0], 4, k), x.dtype),
+        interpret=interpret,
+    )(tp, u)
+    y = y[:t].reshape(t, 2, 2, k)
+    return assemble_winograd_tiles(y, b, h, w_)

@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers."""
+from repro.launch.mesh import (
+    data_axes, elastic_mesh_shape, make_mesh, make_production_mesh,
+)
+
+__all__ = ["make_production_mesh", "make_mesh", "elastic_mesh_shape", "data_axes"]

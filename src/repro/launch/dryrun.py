@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (device count locks at first init).
+__doc__ = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script
+  1. builds the model and its ShapeDtypeStruct inputs (no allocation),
+  2. abstract-init's params/optimizer state via jax.eval_shape,
+  3. jits train_step / serve_step with the sharding rules of
+     repro.distributed.sharding, lowers, compiles,
+  4. records memory_analysis / cost_analysis / per-kind collective bytes
+     (parsed from the partitioned HLO) into a JSON report consumed by
+     benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k --mesh single --out reports/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch, shape_applicable
+from repro.distributed.sharding import (
+    cache_shardings, input_shardings, shard_params,
+)
+from repro.distributed.trainstep import TrainState, init_train_state, make_train_step
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.utils.hlo_analysis import collect_collective_stats
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.dryrun")
+
+
+def _tree_shardings(tree_shape, like_params_shardings, mesh):
+    """Shardings for a TrainState: params specs reused for mu/nu."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    repl = NamedSharding(mesh, P())
+
+    return TrainState(
+        params=like_params_shardings,
+        opt=type(tree_shape.opt)(
+            step=repl,
+            mu=like_params_shardings,
+            nu=like_params_shardings,
+        ),
+        comp=None,
+        step=repl,
+    )
+
+
+FSDP_PARAM_THRESHOLD = 15e9   # larger trains use ZeRO-3 per-layer gather
+SERVE_STREAM_THRESHOLD = 6e9  # bf16 params per chip at 16-way TP
+
+
+def resolve_variant(cfg, shape, variant: str) -> str:
+    """'auto' → fsdp for big-model training and weight-streamed serving.
+
+    Serving: at 16-way TP a 72–90B model's bf16 weights are 9–11 GB per
+    chip, which together with a 32k KV cache exceeds HBM.  The fsdp
+    variant + per-layer gather = weight streaming: weights live 256-way
+    sharded, each layer is gathered on use (the decode-latency cost is
+    the standard memory/latency trade; recorded in EXPERIMENTS §Perf C4).
+    """
+    if variant != "auto":
+        return variant
+    if shape.kind == "train":
+        return "fsdp" if cfg.num_params() >= FSDP_PARAM_THRESHOLD else "tp"
+    # Weight streaming pays off for DECODE (one token amortizes nothing —
+    # memory is the roof); prefill is compute-bound and the per-layer
+    # gathers regressed it (measured 16.8→79 GB on qwen2 prefill_32k).
+    if shape.is_decode and cfg.num_params() * 2 / 16 > SERVE_STREAM_THRESHOLD:
+        return "fsdp"
+    return "tp"
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, variant: str = "auto",
+             donate: bool = True, cfg_override=None) -> Dict[str, Any]:
+    """Lower+compile one cell; return the roofline record."""
+    import dataclasses
+
+    cfg = cfg_override if cfg_override is not None else get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    variant = resolve_variant(cfg, shape, variant)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": {k: int(v) for k, v in mesh.shape.items()},
+        "variant": variant, "ok": False,
+    }
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        return rec
+    if variant == "fsdp":
+        # ZeRO-3 per-layer gather; sequence-parallel activations only for
+        # training (decode activations are (b, 1, d) — nothing to shard).
+        cfg = dataclasses.replace(cfg, fsdp_gather=True,
+                                  seq_shard=(shape.kind == "train"))
+    t0 = time.time()
+    try:
+        model = build_model(cfg)
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        if shape.kind != "train":
+            # Inference deployments serve bf16 weights (half the HBM).
+            params_shape = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                if jnp.issubdtype(s.dtype, jnp.floating) else s, params_shape)
+        pshard = shard_params(params_shape, mesh, variant)
+        specs = model.input_specs(shape)
+        in_shard = input_shardings(specs, mesh, shape.global_batch)
+
+        if shape.kind == "train":
+            state_shape = jax.eval_shape(
+                lambda k: init_train_state(model, k), jax.random.PRNGKey(0))
+            sshard = _tree_shardings(state_shape, pshard, mesh)
+            # Gradient accumulation: 16 microbatches bounds live
+            # activations to one per-device row (measured: 415→~20 GB
+            # temp on qwen2-72b) and amortizes the grad reduction.
+            mb = 16 if shape.global_batch % 16 == 0 else 1
+            step_fn = make_train_step(model, microbatches=mb)
+            rec["microbatches"] = mb
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(sshard, in_shard),
+                donate_argnums=(0,) if donate else (),
+            )
+            with jax.set_mesh(mesh):
+                lowered = jitted.lower(state_shape, specs)
+        elif shape.kind == "prefill":
+            # Prefill = inference forward over the full prompt, returning
+            # the LAST position's logits (serving samples the first new
+            # token; returning all 32k positions' logits would make the
+            # program output b·s·vocab f32 — 12.9 GB/device on granite).
+            def prefill_step(params, batch):
+                return model.forward(params, batch)[:, -1]
+
+            jitted = jax.jit(prefill_step, in_shardings=(pshard, in_shard))
+            with jax.set_mesh(mesh):
+                lowered = jitted.lower(params_shape, specs)
+        else:
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cshard = cache_shardings(cache_shape, mesh)
+
+            def serve_step(params, batch, cache):
+                return model.decode_step(params, batch, cache)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(pshard, in_shard, cshard),
+                donate_argnums=(2,) if donate else (),
+            )
+            with jax.set_mesh(mesh):
+                lowered = jitted.lower(params_shape, specs, cache_shape)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        ca = compiled.cost_analysis()
+        rec["cost"] = {
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        }
+        hlo_text = compiled.as_text()
+        stats = collect_collective_stats(hlo_text)
+        rec["collectives"] = stats.summary()
+        rec["collective_bytes"] = int(stats.total_bytes)
+        from repro.utils.hlo_analysis import cpu_bf16_upcast_bytes
+        rec["cpu_upcast_bytes"] = int(cpu_bf16_upcast_bytes(hlo_text))
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — cell failures are data
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        log.error("cell %s × %s failed: %s", arch, shape_name, rec["error"])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--variant", default="auto",
+                    help="sharding rule variant (auto|tp|fsdp)")
+    ap.add_argument("--out", default="reports/dryrun.json")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    existing: Dict[str, Any] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for r in json.load(f).get("cells", []):
+                key = (r["arch"], r["shape"], json.dumps(r["mesh"]))
+                existing[key] = r
+
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        log.info("=== mesh %s ===", dict(mesh.shape))
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, json.dumps({k: int(v) for k, v in mesh.shape.items()}))
+                if key in existing and existing[key].get("ok"):
+                    log.info("cached ok: %s × %s", arch, shape)
+                    results.append(existing[key])
+                    continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh, variant=args.variant)
+                results.append(rec)
+                status = "ok" if rec["ok"] else rec.get("skipped", rec.get("error", "?"))[:80]
+                log.info("%s × %s [%s]: %s (%.0fs)", arch, shape,
+                         "multi" if multi_pod else "single", status,
+                         time.time() - t0)
+                # Incremental save (long runs survive interruption).
+                _save(args.out, results, existing)
+    _save(args.out, results, existing)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if "skipped" in r)
+    log.info("dry-run complete: %d ok, %d skipped, %d failed",
+             n_ok, n_skip, len(results) - n_ok - n_skip)
+
+
+def _save(path: str, results, existing) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    merged: Dict[Any, Any] = dict(existing)
+    for r in results:
+        key = (r["arch"], r["shape"], json.dumps(r["mesh"]))
+        merged[key] = r
+    with open(path + ".tmp", "w") as f:
+        json.dump({"cells": list(merged.values())}, f, indent=1)
+    os.replace(path + ".tmp", path)
+
+
+if __name__ == "__main__":
+    main()

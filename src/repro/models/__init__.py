@@ -1,0 +1,4 @@
+"""LM-family model zoo (pure JAX, scan-over-layers, remat)."""
+from repro.models.model_factory import Model, build_model, cross_entropy
+
+__all__ = ["Model", "build_model", "cross_entropy"]

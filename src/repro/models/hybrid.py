@@ -1,0 +1,141 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block.
+
+Zamba2 [arXiv:2411.15242] interleaves one shared (weight-tied)
+attention+MLP block every few Mamba2 layers.  We scan over groups of
+`shared_attn_every` Mamba layers and apply the shared block (same
+params every time) between groups — weight reuse keeps the parameter
+count near the SSM backbone's while adding attention's mixing.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_init
+from repro.models.layers import (
+    dtype_of, embed, embed_init, norm_init, rms_norm, softcap, swiglu_init, unembed,
+)
+from repro.models.ssm import init_mamba_cache, mamba_decode, mamba_forward, mamba_init
+from repro.models.transformer import _stack_layers, layer_decode, layer_forward, layer_init
+
+Array = Any
+Params = Dict[str, Any]
+
+
+def _groups(cfg) -> Tuple[int, int, int]:
+    """(n_full_groups, group_size, remainder_layers).
+
+    zamba2-1.2b has 38 Mamba layers with the shared block every 6 —
+    the last 2 layers form a tail group without a shared-attn call.
+    """
+    k = cfg.shared_attn_every
+    n_groups = cfg.num_layers // k
+    rem = cfg.num_layers - n_groups * k
+    return n_groups, k, rem
+
+
+def init_hybrid(key, cfg) -> Params:
+    ke, km, ka, kh, kr = jax.random.split(key, 5)
+    n_groups, k, rem = _groups(cfg)
+    groups = []
+    for gk in jax.random.split(km, n_groups):
+        groups.append(_stack_layers(gk, cfg, k, mamba_init))
+    p = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "mamba_groups": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups),
+        "shared_attn": layer_init(ka, cfg),     # ONE block, reused per group
+        "final_norm": norm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if rem:
+        p["tail_mamba"] = _stack_layers(kr, cfg, rem, mamba_init)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(kh, cfg.vocab_size, cfg.d_model, cfg.param_dtype)
+    return p
+
+
+def hybrid_forward(params: Params, tokens: Array, cfg, *, remat: bool = True) -> Array:
+    from repro.distributed.fsdp import gather_layer, pin_layer_stack
+    dt = dtype_of(cfg)
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, dt)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    shared = gather_layer(params["shared_attn"], cfg)
+
+    from repro.distributed.activations import constrain_logits, constrain_seq
+
+    def group_body(x, group_p):
+        def mamba_body(x, lp):
+            x = constrain_seq(x, cfg)
+            return mamba_forward(gather_layer(lp, cfg), x, cfg), None
+        x, _ = jax.lax.scan(mamba_body, x, group_p)
+        x, _ = layer_forward(shared, x, cfg, positions)   # weight-tied block
+        return x, None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    x, _ = jax.lax.scan(body, x, pin_layer_stack(params["mamba_groups"], cfg))
+    if "tail_mamba" in params:
+        def tail_body(x, lp):
+            return mamba_forward(gather_layer(lp, cfg), x, cfg), None
+        x, _ = jax.lax.scan(jax.checkpoint(tail_body) if remat else tail_body,
+                            x, pin_layer_stack(params["tail_mamba"], cfg))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain_logits(unembed(head, x))
+    return softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_hybrid_cache(cfg, batch: int, max_len: int) -> Params:
+    n_groups, k, rem = _groups(cfg)
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "mamba": init_mamba_cache(cfg, batch, n_groups * k),
+        "tail": init_mamba_cache(cfg, batch, rem) if rem else None,
+        "attn": {
+            "k": jnp.zeros((n_groups, batch, max_len, kvh, hd), jnp.bfloat16),
+            "v": jnp.zeros((n_groups, batch, max_len, kvh, hd), jnp.bfloat16),
+            "len": jnp.zeros((n_groups, batch), jnp.int32),
+        },
+    }
+
+
+def hybrid_decode_step(params: Params, token: Array, cache: Params, cfg
+                       ) -> Tuple[Array, Params]:
+    dt = dtype_of(cfg)
+    n_groups, k, rem = _groups(cfg)
+    x = embed(params["embed"], token, dt)
+    shared = params["shared_attn"]
+    mcache = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups, k) + a.shape[1:]), cache["mamba"])
+
+    def group(x, inp):
+        group_p, mc, ac = inp
+
+        def mamba_body(x, inp2):
+            lp, c = inp2
+            return mamba_decode(lp, x, cfg, c)
+
+        x, nmc = jax.lax.scan(mamba_body, x, (group_p, mc))
+        x, nac = layer_decode(shared, x, cfg, ac)
+        return x, (nmc, nac)
+
+    x, (nm, na) = jax.lax.scan(group, x, (params["mamba_groups"], mcache, cache["attn"]))
+    nm = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups * k,) + a.shape[2:]), nm)
+    ntail = cache.get("tail")
+    if rem:
+        def tail_body(x, inp):
+            lp, c = inp
+            return mamba_decode(lp, x, cfg, c)
+        x, ntail = jax.lax.scan(tail_body, x, (params["tail_mamba"], cache["tail"]))
+    na = {"k": na["k"], "v": na["v"], "len": na["len"] + 1}
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x[:, 0])
+    return softcap(logits.astype(jnp.float32), cfg.final_logit_softcap), \
+        {"mamba": nm, "tail": ntail, "attn": na}

@@ -1,0 +1,157 @@
+"""Shared layers for the LM model zoo (pure JAX, explicit param pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays (or ShapeDtypeStructs during
+    the dry-run — init functions are pure so `jax.eval_shape` works);
+  * every layer takes (params, inputs, cfg) and is shape-polymorphic in
+    batch/seq;
+  * logical sharding axes are annotated at the model level
+    (repro.distributed.sharding) rather than inside layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype: str,
+               bias: bool = False) -> Params:
+    scale = 1.0 / np.sqrt(in_dim)
+    p = {"kernel": jax.random.uniform(key, (in_dim, out_dim), jnp.dtype(dtype),
+                                      -scale, scale)}
+    if bias:
+        p["bias"] = jnp.zeros((out_dim,), jnp.dtype(dtype))
+    return p
+
+
+def embed_init(key, vocab: int, dim: int, dtype: str) -> Params:
+    return {"embedding": jax.random.normal(key, (vocab, dim), jnp.dtype(dtype)) * 0.02}
+
+
+def norm_init(dim: int, dtype: str) -> Params:
+    return {"scale": jnp.ones((dim,), jnp.dtype(dtype))}
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def dense(p: Params, x: Array, dtype=None) -> Array:
+    kernel = p["kernel"]
+    if dtype is not None:
+        kernel = kernel.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ kernel
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+def rms_norm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    return y.astype(dt)
+
+
+def embed(p: Params, ids: Array, dtype=None, scale: bool = False) -> Array:
+    e = p["embedding"]
+    if dtype is not None:
+        e = e.astype(dtype)
+    y = jnp.take(e, ids, axis=0)
+    if scale:
+        y = y * np.sqrt(e.shape[-1]).astype(y.dtype)
+    return y
+
+
+def unembed(p: Params, x: Array) -> Array:
+    """Project to vocab logits (uses embedding transpose when tied)."""
+    e = p["embedding"].astype(x.dtype)
+    return x @ e.T
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype: str) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def swiglu(p: Params, x: Array, act: str = "silu", dtype=None) -> Array:
+    g = dense(p["gate"], x, dtype)
+    u = dense(p["up"], x, dtype)
+    return dense(p["down"], _ACTS[act](g) * u, dtype)
+
+
+def mlp_gelu_init(key, d_model: int, d_ff: int, dtype: str, bias: bool = True) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": dense_init(k1, d_model, d_ff, dtype, bias=bias),
+        "down": dense_init(k2, d_ff, d_model, dtype, bias=bias),
+    }
+
+
+def mlp_gelu(p: Params, x: Array, act: str = "gelu", dtype=None) -> Array:
+    return dense(p["down"], _ACTS[act](dense(p["up"], x, dtype)), dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def sinusoidal_positions(seq: int, dim: int) -> np.ndarray:
+    """Whisper-style sinusoidal position embeddings."""
+    pos = np.arange(seq)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, dim, 2) / dim)
+    out = np.zeros((seq, dim), np.float32)
+    out[:, 0::2] = np.sin(pos * div)
+    out[:, 1::2] = np.cos(pos * div)
+    return out

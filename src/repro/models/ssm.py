@@ -1,0 +1,195 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD: sequences are split into chunks of Q tokens; within a
+chunk the computation is a masked-decay "attention" (quadratic in Q,
+parallel); across chunks a linear recurrence over per-chunk states
+(H, P, N) runs in a `lax.scan` — O(S·H·P·N) total, sub-quadratic in S,
+which is what qualifies the SSM/hybrid archs for the `long_500k` cell.
+
+Decode is a single-step state update: h ← dA·h + dt·B⊗x, y = C·h + D·x.
+
+The sequential inter-chunk recurrence is the Pallas target
+(kernels/ssd_scan.py); this module is its jnp twin and the dry-run path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense, dense_init, dtype_of, norm_init, rms_norm
+
+Array = Any
+Params = Dict[str, Any]
+
+
+def ssm_dims(cfg) -> Tuple[int, int, int, int]:
+    """(d_inner, heads, head_dim, state)."""
+    d_inner = cfg.d_model * cfg.ssm_expand
+    head_dim = cfg.ssm_head_dim
+    heads = d_inner // head_dim
+    return d_inner, heads, head_dim, cfg.ssm_state
+
+
+def mamba_init(key, cfg) -> Params:
+    d_inner, heads, head_dim, n = ssm_dims(cfg)
+    d = cfg.d_model
+    conv_ch = d_inner + 2 * n  # x + B + C go through the causal conv
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    pdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": norm_init(d, cfg.param_dtype),
+        # in_proj → [z (d_inner), x (d_inner), B (n), C (n), dt (heads)]
+        "in_proj": dense_init(k1, d, 2 * d_inner + 2 * n + heads, cfg.param_dtype),
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv_width, conv_ch), pdt) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads).astype(pdt)),
+        "D": jnp.ones((heads,), pdt),
+        "dt_bias": jnp.zeros((heads,), pdt),
+        "out_norm": norm_init(d_inner, cfg.param_dtype),
+        "out_proj": dense_init(k3, d_inner, d, cfg.param_dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along seq. x: (b, s, c); w: (k, c)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # k is tiny (4); unrolled adds are XLA-fusible
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_forward(xh: Array, dt: Array, a: Array, bmat: Array, cmat: Array,
+                chunk: int) -> Tuple[Array, Array]:
+    """Chunked SSD core.
+
+    xh: (b, s, h, p)   dt: (b, s, h)   a: (h,) positive decay rates
+    bmat, cmat: (b, s, n)  (single B/C group broadcast over heads)
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+    Recurrence: state_t = exp(-a·dt_t)·state_{t-1} + dt_t·B_t⊗x_t;
+                y_t = C_t·state_t (+ D·x_t added by the caller).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = max(1, s // chunk)
+    chunk = s // nc
+    assert nc * chunk == s, "seq must be divisible by ssm_chunk"
+
+    log_da = -(dt * a[None, None, :])
+    xr = xh.reshape(b, nc, chunk, h, p)
+    br = bmat.reshape(b, nc, chunk, n)
+    cr = cmat.reshape(b, nc, chunk, n)
+    dtr = dt.reshape(b, nc, chunk, h)
+    ldr = log_da.reshape(b, nc, chunk, h)
+    cum = jnp.cumsum(ldr, axis=2)
+
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # Mask BEFORE the exp: above the diagonal `decay` is positive and can
+    # overflow; exp(inf)·0 is fine forward but its cotangent is NaN.
+    gmat = jnp.exp(jnp.where(tri[None, None, :, :, None], decay, -60.0))
+    cb = jnp.einsum("bctn,bcsn->bcts", cr, br)
+    w = cb[..., None] * gmat
+    y_intra = jnp.einsum("bctsh,bcsh,bcshp->bcthp", w, dtr, xr)
+
+    # Per-chunk input→state contribution.
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                          # (b,nc,Q,h)
+    s_chunk = jnp.einsum("bcsh,bcsn,bcshp->bchpn", tail * dtr, br, xr)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                          # (b,nc,h)
+
+    # Inter-chunk recurrence (the ssd_scan Pallas target).
+    def scan_body(hstate, inp):
+        s_c, dec = inp                                               # (b,h,p,n),(b,h)
+        out = hstate                                                 # state BEFORE chunk
+        hstate = hstate * dec[..., None, None] + s_c
+        return hstate, out
+
+    s_scan = jnp.moveaxis(s_chunk, 1, 0)                             # (nc,b,h,p,n)
+    d_scan = jnp.moveaxis(chunk_decay, 1, 0)                         # (nc,b,h)
+    h0 = jnp.zeros((b, h, p, n), xh.dtype)
+    h_final, h_prev = jax.lax.scan(scan_body, h0, (s_scan, d_scan))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                              # (b,nc,h,p,n)
+
+    # Inter-chunk output: Y[t] += C_t · exp(cum_t) h_prev
+    y_inter = jnp.einsum("bcth,bctn,bchpn->bcthp", jnp.exp(cum), cr, h_prev)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_final
+
+
+def mamba_forward(p: Params, x: Array, cfg) -> Array:
+    """One Mamba2 block (pre-norm residual). x: (b, s, d)."""
+    dt_ = dtype_of(cfg)
+    d_inner, heads, head_dim, n = ssm_dims(cfg)
+    b, s, d = x.shape
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    zxbcdt = dense(p["in_proj"], h, dt_)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(dt_),
+                                        p["conv_b"].astype(dt_)))
+    xin, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(b, s, heads, head_dim)
+    y, _ = ssd_forward(xh.astype(jnp.float32), dt, a,
+                       bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+                       cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(dt_)
+    y = rms_norm(p["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return x + dense(p["out_proj"], y, dt_)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-step state update)
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg, batch: int, n_layers: int) -> Params:
+    d_inner, heads, head_dim, n = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        # conv window in the compute dtype (it holds bf16 activations);
+        # the SSD state stays f32 (long-horizon recurrence accumulator).
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, conv_ch),
+                          jnp.dtype(cfg.compute_dtype)),
+        "state": jnp.zeros((n_layers, batch, heads, head_dim, n), jnp.float32),
+    }
+
+
+def mamba_decode(p: Params, x: Array, cfg, cache: Params) -> Tuple[Array, Params]:
+    """x: (b, 1, d); cache: {'conv': (b,w-1,c), 'state': (b,h,p,n)}."""
+    dt_ = dtype_of(cfg)
+    d_inner, heads, head_dim, n = ssm_dims(cfg)
+    b = x.shape[0]
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    zxbcdt = dense(p["in_proj"], h, dt_)[:, 0]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
+    # Conv in the COMPUTE dtype (bf16), matching the training path —
+    # running it in f32 here makes decode drift from teacher forcing by
+    # a bf16 ulp per layer (caught by the prefill/decode consistency test).
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1).astype(dt_)
+    window = jnp.concatenate([cache["conv"].astype(dt_), conv_in[:, None, :]],
+                             axis=1)                                  # (b,w,c)
+    w = p["conv_w"].astype(dt_)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w)
+                           + p["conv_b"].astype(dt_)).astype(jnp.float32)
+    xin, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(-(dt * a[None, :]))                                  # (b,h)
+    xh = xin.reshape(b, heads, head_dim).astype(jnp.float32)
+    new_state = (cache["state"] * da[..., None, None]
+                 + jnp.einsum("bh,bn,bhp->bhpn", dt, bmat, xh))
+    y = jnp.einsum("bn,bhpn->bhp", cmat, new_state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, d_inner).astype(dt_)
+    y = rms_norm(p["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = x + dense(p["out_proj"], y, dt_)[:, None, :]
+    new_cache = {"conv": window[:, 1:], "state": new_state}
+    return out, new_cache

@@ -1,0 +1,335 @@
+"""Decoder-only transformer LM (dense / gemma2-alternating / VLM variants).
+
+Layer stacks are `lax.scan`-ed with params stacked on a leading layer
+axis — keeping HLO size O(1) in depth (essential for 80–100-layer
+dry-run compiles) — and `jax.checkpoint` applied to the scanned body
+(remat) for training memory.
+
+Variants:
+  * dense GQA (qwen2/starcoder2/deepseek): plain scan over L layers;
+  * gemma2: scan over L/2 (local, global) layer *pairs* + softcaps +
+    embedding scaling;
+  * VLM (llama-3.2-vision): scan over groups of `cross_attn_every−1`
+    self-attn layers + 1 gated cross-attention layer reading vision
+    patch embeddings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import (
+    attention_init,
+    chunked_attention,
+    cross_attention,
+    cross_attention_init,
+    decode_attention,
+    naive_attention,
+    qkv_project,
+)
+from repro.models.layers import (
+    dense,
+    dtype_of,
+    embed,
+    embed_init,
+    norm_init,
+    rms_norm,
+    softcap,
+    swiglu,
+    swiglu_init,
+    unembed,
+)
+
+Array = Any
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer block
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    if cfg.num_experts:
+        from repro.models.moe import moe_init
+        mlp = moe_init(k2, cfg)
+    elif cfg.mlp_kind == "gelu":
+        from repro.models.layers import mlp_gelu_init
+        mlp = mlp_gelu_init(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    else:
+        mlp = swiglu_init(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    return {
+        "attn_norm": norm_init(cfg.d_model, cfg.param_dtype),
+        "attn": attention_init(k1, cfg),
+        "mlp_norm": norm_init(cfg.d_model, cfg.param_dtype),
+        "mlp": mlp,
+    }
+
+
+def _ffn(p: Params, h: Array, cfg):
+    """Dense SwiGLU / gelu-MLP / MoE FFN; returns (y, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.num_experts:
+        from repro.models.moe import moe_ffn
+        return moe_ffn(p, h, cfg)
+    if cfg.mlp_kind == "gelu":
+        from repro.models.layers import mlp_gelu
+        return mlp_gelu(p, h, "gelu", dtype_of(cfg)), zero
+    return swiglu(p, h, cfg.act, dtype_of(cfg)), zero
+
+
+def layer_forward(p: Params, x: Array, cfg, positions: Array,
+                  *, window: int = 0) -> Tuple[Array, Array]:
+    """Returns (x, aux_loss) — aux is the MoE load-balance term (0 if dense)."""
+    dt = dtype_of(cfg)
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    q, k, v = qkv_project(p["attn"], h, cfg, positions, dt)
+    attn_fn = naive_attention if cfg.attention_impl == "naive" else chunked_attention
+    o = attn_fn(q, k, v, causal=True, window=window,
+                logit_softcap=cfg.attn_logit_softcap,
+                **({} if cfg.attention_impl == "naive" else {"q_chunk": cfg.q_chunk}))
+    o = o.reshape(x.shape[:-1] + (cfg.num_heads * cfg.head_dim,))
+    x = x + dense(p["attn"]["o"], o, dt)
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    y, aux = _ffn(p["mlp"], h, cfg)
+    return x + y, aux
+
+
+def layer_decode(p: Params, x: Array, cfg, cache: Params, *,
+                 window: int = 0) -> Tuple[Array, Params]:
+    """Single-token decode. cache: {'k': (b,L,kvh,hd), 'v': ..., 'len': (b,)}"""
+    dt = dtype_of(cfg)
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    positions = jnp.reshape(cache["len"], (-1, 1))  # (b,1) current position
+    q, k_new, v_new = qkv_project(p["attn"], h, cfg, positions, dt)
+    idx = jnp.reshape(cache["len"], (-1,))
+    k_cache = jax.lax.dynamic_update_slice_in_dim(  # fallback below for ragged
+        cache["k"], k_new.astype(cache["k"].dtype), 0, axis=1) if False else \
+        _scatter_cache(cache["k"], k_new, idx)
+    v_cache = _scatter_cache(cache["v"], v_new, idx)
+    o = decode_attention(q, k_cache, v_cache, cache_len=idx + 1, window=window,
+                         logit_softcap=cfg.attn_logit_softcap)
+    o = o.reshape(x.shape[:-1] + (cfg.num_heads * cfg.head_dim,))
+    x = x + dense(p["attn"]["o"], o, dt)
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    y, _ = _ffn(p["mlp"], h, cfg)
+    x = x + y
+    new_cache = {"k": k_cache, "v": v_cache, "len": cache["len"]}
+    return x, new_cache
+
+
+def _scatter_cache(cache: Array, new: Array, idx: Array) -> Array:
+    """Write one token's K/V at per-example positions idx: (b,).
+
+    Implemented as a masked select rather than a scatter: XLA lowers the
+    batched scatter through an f32 upcast and GSPMD replicates the
+    batch dim (measured: 64 GB of f32 stacked-cache copies on qwen2-72b
+    decode_32k).  The where-select is elementwise — it keeps the cache
+    bf16, partitions along every sharded dim, and the full-cache write
+    it implies is free next to decode attention's full-cache read.
+    """
+    mask = (jnp.arange(cache.shape[1])[None, :] == idx[:, None])[..., None, None]
+    return jnp.where(mask, new[:, :1].astype(cache.dtype), cache)
+
+
+# ---------------------------------------------------------------------------
+# Whole decoder
+# ---------------------------------------------------------------------------
+
+def _stack_layers(key, cfg, n: int, init_fn) -> Params:
+    keys = jax.random.split(key, n)
+    layers = [init_fn(k, cfg) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_decoder(key, cfg) -> Params:
+    ke, kl, kc = jax.random.split(key, 3)
+    p: Params = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.alt_local_global:
+        assert cfg.num_layers % 2 == 0
+        k1, k2 = jax.random.split(kl)
+        p["local_layers"] = _stack_layers(k1, cfg, cfg.num_layers // 2, layer_init)
+        p["global_layers"] = _stack_layers(k2, cfg, cfg.num_layers // 2, layer_init)
+    elif cfg.cross_attn_every:
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        n_self = cfg.cross_attn_every - 1
+        k1, k2, k3 = jax.random.split(kl, 3)
+        groups = []
+        for gk in jax.random.split(k1, n_groups):
+            groups.append(_stack_layers(gk, cfg, n_self, layer_init))
+        p["self_layers"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups)
+        p["cross_layers"] = _stack_layers(
+            k2, cfg, n_groups,
+            lambda k, c: {
+                "norm": norm_init(c.d_model, c.param_dtype),
+                "xattn": cross_attention_init(k, c),
+                "gate": jnp.zeros((1,), jnp.dtype(c.param_dtype)),
+            },
+        )
+        if not cfg.tie_embeddings:
+            p["lm_head"] = embed_init(k3, cfg.vocab_size, cfg.d_model, cfg.param_dtype)
+        return p
+    else:
+        p["layers"] = _stack_layers(kl, cfg, cfg.num_layers, layer_init)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(kc, cfg.vocab_size, cfg.d_model, cfg.param_dtype)
+    return p
+
+
+def decoder_forward(params: Params, tokens: Array, cfg,
+                    *, vision_embeds: Optional[Array] = None,
+                    remat: bool = True) -> Tuple[Array, Array]:
+    """tokens: (b, s) int32 → (logits (b, s, vocab), moe aux loss)."""
+    dt = dtype_of(cfg)
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, dt, scale=cfg.scale_embed)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    from repro.distributed.activations import constrain_logits, constrain_seq
+    from repro.distributed.fsdp import gather_layer, pin_layer_stack
+
+    if cfg.alt_local_global:
+        def pair_body(x, lp):
+            x = constrain_seq(x, cfg)
+            local_p, global_p = gather_layer(lp, cfg)
+            x, a1 = layer_forward(local_p, x, cfg, positions, window=cfg.sliding_window)
+            x, a2 = layer_forward(global_p, x, cfg, positions, window=0)
+            return x, a1 + a2
+        body = jax.checkpoint(pair_body) if remat else pair_body
+        x, auxs = jax.lax.scan(
+            body, x,
+            (pin_layer_stack(params["local_layers"], cfg),
+             pin_layer_stack(params["global_layers"], cfg)))
+    elif cfg.cross_attn_every:
+        def group_body(x, gp):
+            self_p, cross_p = gp
+            cross_p = gather_layer(cross_p, cfg)
+
+            def self_body(x, lp):
+                x = constrain_seq(x, cfg)
+                x, a = layer_forward(gather_layer(lp, cfg), x, cfg, positions)
+                return x, a
+
+            # Remat the inner stack too: the outer group checkpoint alone
+            # leaves the inner scan's residuals (MLP hiddens, ~19 GB on
+            # llama-vision train) live during each group's backward.
+            x, a = jax.lax.scan(jax.checkpoint(self_body) if remat else self_body,
+                                x, self_p)
+            h = rms_norm(cross_p["norm"], x, cfg.norm_eps)
+            xa = cross_attention(cross_p["xattn"], h, vision_embeds, cfg, dt)
+            x = x + jnp.tanh(cross_p["gate"]).astype(dt) * xa
+            return x, jnp.sum(a)
+        body = jax.checkpoint(group_body) if remat else group_body
+        x, auxs = jax.lax.scan(
+            body, x,
+            (pin_layer_stack(params["self_layers"], cfg),
+             pin_layer_stack(params["cross_layers"], cfg)))
+    else:
+        def layer_body(x, lp):
+            x = constrain_seq(x, cfg)
+            x, a = layer_forward(gather_layer(lp, cfg), x, cfg, positions,
+                                 window=cfg.sliding_window)
+            return x, a
+        body = jax.checkpoint(layer_body) if remat else layer_body
+        x, auxs = jax.lax.scan(body, x, pin_layer_stack(params["layers"], cfg))
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain_logits(unembed(head, x))
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode step
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype: str = "bfloat16") -> Params:
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(dtype)
+
+    def kv(n_layers):
+        return {
+            "k": jnp.zeros((n_layers, batch, max_len, kvh, hd), dt),
+            "v": jnp.zeros((n_layers, batch, max_len, kvh, hd), dt),
+            "len": jnp.zeros((n_layers, batch), jnp.int32),
+        }
+
+    if cfg.alt_local_global:
+        return {"local": kv(cfg.num_layers // 2), "global": kv(cfg.num_layers // 2)}
+    if cfg.cross_attn_every:
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        return {"self": kv(n_groups * (cfg.cross_attn_every - 1))}
+    return {"layers": kv(cfg.num_layers)}
+
+
+def decode_step(params: Params, token: Array, cache: Params, cfg,
+                *, vision_embeds: Optional[Array] = None) -> Tuple[Array, Params]:
+    """token: (b, 1) → (logits (b, vocab), updated cache)."""
+    dt = dtype_of(cfg)
+    x = embed(params["embed"], token, dt, scale=cfg.scale_embed)
+
+    if cfg.alt_local_global:
+        # Interleave local/global pairs (windows are static per stack).
+        def pair(x, inp):
+            (lp, lkc), (gp, gkc) = inp
+            x, nlc = layer_decode(lp, x, cfg, lkc, window=cfg.sliding_window)
+            x, ngc = layer_decode(gp, x, cfg, gkc, window=0)
+            return x, (nlc, ngc)
+
+        x, (nl, ng) = jax.lax.scan(
+            pair, x,
+            ((params["local_layers"], cache["local"]),
+             (params["global_layers"], cache["global"])))
+        new_cache = {"local": _bump(nl), "global": _bump(ng)}
+    elif cfg.cross_attn_every:
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        n_self = cfg.cross_attn_every - 1
+        kvc = cache["self"]
+        kv_grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, n_self) + a.shape[1:]), kvc)
+
+        def group(x, inp):
+            (self_p, cross_p), kcs = inp
+
+            def self_body(x, inp2):
+                lp, kc = inp2
+                x, nc = layer_decode(lp, x, cfg, kc)
+                return x, nc
+
+            x, ncs = jax.lax.scan(self_body, x, (self_p, kcs))
+            h = rms_norm(cross_p["norm"], x, cfg.norm_eps)
+            xa = cross_attention(cross_p["xattn"], h, vision_embeds, cfg, dt)
+            x = x + jnp.tanh(cross_p["gate"]).astype(dt) * xa
+            return x, ncs
+
+        x, nkv = jax.lax.scan(
+            group, x, ((params["self_layers"], params["cross_layers"]), kv_grouped))
+        nkv = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups * n_self,) + a.shape[2:]), nkv)
+        new_cache = {"self": _bump(nkv)}
+    else:
+        def body(x, inp):
+            lp, kc = inp
+            x, nc = layer_decode(lp, x, cfg, kc, window=cfg.sliding_window)
+            return x, nc
+
+        x, nkv = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": _bump(nkv)}
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x[:, 0])
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+def _bump(kvc: Params) -> Params:
+    return {"k": kvc["k"], "v": kvc["v"], "len": kvc["len"] + 1}

@@ -1,0 +1,271 @@
+"""int8 integer-arithmetic-only inference (paper §3.1.2).
+
+Follows the structure of TFLite's integer-only inference [Jacob et al.]:
+weights and activations are 8-bit integers; matmul/conv accumulate in
+int32 and *requantize* to int8 with a per-tensor scale.  The paper's
+Insight 2 hinges on the cost structure this creates:
+
+  * conv / dwconv / FC: int8 MACs (cheaper) + one requant per output;
+  * element-wise add/mul: inputs with different scales must be RESCALED
+    to a common scale before the op — pure overhead that makes quantized
+    element-wise ops *slower* than float (paper Fig. 5: 2.55×–2.60×
+    degradation on Snapdragon 855 / Exynos 9820).
+
+We use static per-tensor scales (profiling cares about cost structure,
+not calibration quality) and float multipliers for requantization
+(TFLite uses fixed-point multipliers; the arithmetic cost on XLA:CPU is
+equivalent — one multiply + round + clip per element).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Array = Any
+
+# Static scales: activations ~N(0, 1) → scale so ±4σ spans int8.
+ACT_SCALE = 4.0 / 127.0
+WEIGHT_SCALE = 0.4 / 127.0
+
+
+def quantize_symmetric(x: Array, scale: float) -> Array:
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize(q: Array, scale: float) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def requantize(acc: Array, in_scale: float, out_scale: float) -> Array:
+    """int32 accumulator → int8 output (one mul + round + clip per element)."""
+    mult = in_scale / out_scale
+    return jnp.clip(jnp.round(acc.astype(jnp.float32) * mult), -127, 127).astype(jnp.int8)
+
+
+def rescale_int8(q: Array, in_scale: float, out_scale: float) -> Array:
+    """Match quantization ranges of element-wise inputs (paper Insight 2).
+
+    This is the per-input overhead that degrades quantized element-wise
+    ops: mul + round + clip on EVERY element before the actual op.
+    """
+    return jnp.clip(jnp.round(q.astype(jnp.float32) * (in_scale / out_scale)),
+                    -127, 127).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Quantized op builders (mirror repro.core.executor.build_op_fn)
+# ---------------------------------------------------------------------------
+
+def _qconv(x: Array, w_q: Array, bias_i32: Array, stride: int, groups: int,
+           act: str, padding: str = "SAME") -> Array:
+    acc = lax.conv_general_dilated(
+        x.astype(jnp.int8), w_q,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc + bias_i32
+    y = requantize(acc, ACT_SCALE * WEIGHT_SCALE, ACT_SCALE)
+    if act in ("relu", "relu6"):
+        y = jnp.maximum(y, 0)
+        if act == "relu6":
+            y = jnp.minimum(y, jnp.int32(round(6.0 / ACT_SCALE))).astype(jnp.int8)
+    elif act in ("hswish", "swish", "sigmoid", "gelu", "tanh"):
+        # Non-piecewise activations run dequant→float→requant (as TFLite's
+        # LUT path: per-element table cost ≈ float op cost on CPU).
+        f = dequantize(y, ACT_SCALE)
+        f = {"hswish": jax.nn.hard_swish, "swish": jax.nn.swish,
+             "sigmoid": jax.nn.sigmoid, "gelu": jax.nn.gelu,
+             "tanh": jnp.tanh}[act](f)
+        y = quantize_symmetric(f, ACT_SCALE)
+    return y
+
+
+def build_quant_op_fn(graph, node) -> Tuple[Callable, List[int]]:
+    """int8 analogue of executor.build_op_fn. Inputs/outputs are int8."""
+    from repro.core.executor import _conv_weights, _weight_seed, make_array
+
+    t = node.op_type
+    p = node.params_dict
+    n_base = p.get("n_inputs", 1)
+
+    def tail(y: Array, extras: List[Array]) -> Array:
+        it = iter(extras)
+        for kind in node.fused:
+            if kind in ("add", "sub", "maximum", "minimum"):
+                rhs = next(it, None)
+                rhs = rhs if rhs is not None else y
+                a = rescale_int8(y, ACT_SCALE, ACT_SCALE * 1.5)
+                b = rescale_int8(rhs, ACT_SCALE, ACT_SCALE * 1.5)
+                op = {"add": jnp.add, "sub": jnp.subtract,
+                      "maximum": jnp.maximum, "minimum": jnp.minimum}[kind]
+                y = jnp.clip(op(a.astype(jnp.int16), b.astype(jnp.int16)), -127, 127).astype(jnp.int8)
+            elif kind == "mul":
+                rhs = next(it, None)
+                rhs = rhs if rhs is not None else y
+                acc = y.astype(jnp.int32) * rhs.astype(jnp.int32)
+                y = requantize(acc, ACT_SCALE * ACT_SCALE, ACT_SCALE)
+            else:  # unary/activation via LUT-equivalent float roundtrip
+                f = dequantize(y, ACT_SCALE)
+                f = _float_unary(kind)(f)
+                y = quantize_symmetric(f, ACT_SCALE)
+        return y
+
+    if t in ("conv2d", "grouped_conv2d", "winograd_conv2d", "dwconv2d"):
+        # Winograd is never selected for int8 (TFLite restriction); treat
+        # as standard conv.
+        w, _ = _conv_weights(node, graph)
+        w_q = np.clip(np.round(w / WEIGHT_SCALE), -127, 127).astype(np.int8)
+        out_c = w.shape[-1]
+        bias = np.zeros((out_c,), np.int32)
+        stride = p.get("stride", 1)
+        groups = p.get("groups", 1)
+        if t == "dwconv2d":
+            groups = graph.tensor(node.inputs[0]).shape[-1]
+        act = p.get("act", "")
+        padding = p.get("padding", "SAME")
+
+        def fn(*xs):
+            return tail(_qconv(xs[0], w_q, bias, stride, groups, act, padding),
+                        list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    if t == "fully_connected":
+        in_c = graph.tensor(node.inputs[0]).shape[-1]
+        out_c = graph.tensor(node.outputs[0]).shape[-1]
+        w = make_array((in_c, out_c), "float32", _weight_seed(node, (in_c, out_c), "w"))
+        w_q = np.clip(np.round(w / WEIGHT_SCALE), -127, 127).astype(np.int8)
+        out_shape = graph.tensor(node.outputs[0]).shape
+        act = p.get("act", "")
+
+        def fn(*xs):
+            acc = lax.dot(xs[0].reshape(-1, in_c).astype(jnp.int8), w_q,
+                          preferred_element_type=jnp.int32)
+            y = requantize(acc, ACT_SCALE * WEIGHT_SCALE, ACT_SCALE)
+            if act == "relu":
+                y = jnp.maximum(y, 0)
+            return tail(y.reshape(out_shape), list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    if t == "mean":
+        keep = p.get("keepdims", False)
+
+        def fn(*xs):
+            acc = jnp.sum(xs[0].astype(jnp.int32), axis=(1, 2), keepdims=keep)
+            denom = xs[0].shape[1] * xs[0].shape[2]
+            return tail(requantize(acc, ACT_SCALE / denom, ACT_SCALE), list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    if t in ("pool_avg", "pool_max"):
+        k = (p.get("kernel_h", 1), p.get("kernel_w", 1))
+        s = p.get("stride", 1)
+
+        def fn(*xs):
+            if t == "pool_max":
+                y = lax.reduce_window(
+                    xs[0], jnp.int8(-128), lax.max,
+                    window_dimensions=(1, k[0], k[1], 1),
+                    window_strides=(1, s, s, 1), padding="SAME")
+                return tail(y, list(xs[n_base:]))
+            acc = lax.reduce_window(
+                xs[0].astype(jnp.int32), jnp.int32(0), lax.add,
+                window_dimensions=(1, k[0], k[1], 1),
+                window_strides=(1, s, s, 1), padding="SAME")
+            # Paper Fig. 5: quantized padding/pool degrade — requant cost.
+            return tail(requantize(acc, ACT_SCALE / (k[0] * k[1]), ACT_SCALE),
+                        list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    if t == "concat":
+        axis = p.get("axis", -1)
+
+        def fn(*xs):
+            # Inputs may carry different scales → rescale each (overhead).
+            parts = [rescale_int8(x, ACT_SCALE, ACT_SCALE) for x in xs[:n_base]]
+            return tail(jnp.concatenate(parts, axis=axis), list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    if t == "split":
+        n = p.get("num_splits", 2)
+        axis = p.get("axis", -1)
+
+        def fn(*xs):
+            return tuple(jnp.split(xs[0], n, axis=axis))
+        return fn, list(node.inputs)
+
+    if t == "pad":
+        pads = tuple(tuple(q) for q in p.get("paddings", ((0, 0), (1, 1), (1, 1), (0, 0))))
+
+        def fn(*xs):
+            return tail(jnp.pad(xs[0], pads), list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    if t == "channel_shuffle":
+        g = p.get("groups", 2)
+
+        def fn(*xs):
+            b_, h, w_, c = xs[0].shape
+            y = xs[0].reshape(b_, h, w_, g, c // g).transpose(0, 1, 2, 4, 3).reshape(b_, h, w_, c)
+            return tail(y, list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    if t == "elementwise":
+        kind = p.get("ew_kind", "add")
+        if kind in ("add", "sub", "maximum", "minimum"):
+            def fn(*xs):
+                a = rescale_int8(xs[0], ACT_SCALE, ACT_SCALE * 1.5)
+                rhs = xs[1] if n_base >= 2 else xs[0]
+                b = rescale_int8(rhs, ACT_SCALE, ACT_SCALE * 1.5)
+                op = {"add": jnp.add, "sub": jnp.subtract,
+                      "maximum": jnp.maximum, "minimum": jnp.minimum}[kind]
+                y = jnp.clip(op(a.astype(jnp.int16), b.astype(jnp.int16)),
+                             -127, 127).astype(jnp.int8)
+                return tail(y, list(xs[n_base:]))
+            return fn, list(node.inputs)
+        if kind == "mul":
+            def fn(*xs):
+                rhs = xs[1] if n_base >= 2 else xs[0]
+                acc = xs[0].astype(jnp.int32) * rhs.astype(jnp.int32)
+                return tail(requantize(acc, ACT_SCALE * ACT_SCALE, ACT_SCALE),
+                            list(xs[n_base:]))
+            return fn, list(node.inputs)
+
+        def fn(*xs):  # unary via LUT-equivalent float roundtrip
+            f = dequantize(xs[0], ACT_SCALE)
+            f = _float_unary(kind)(f)
+            return tail(quantize_symmetric(f, ACT_SCALE), list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    if t == "activation":
+        act = p.get("act", "relu")
+
+        def fn(*xs):
+            if act == "relu":
+                return tail(jnp.maximum(xs[0], 0), list(xs[n_base:]))
+            f = dequantize(xs[0], ACT_SCALE)
+            f = _float_unary(act)(f)
+            return tail(quantize_symmetric(f, ACT_SCALE), list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    raise NotImplementedError(f"quant executor: op type {t!r}")
+
+
+def _float_unary(kind: str) -> Callable[[Array], Array]:
+    import jax
+
+    table = {
+        "exp": jnp.exp, "log": lambda x: jnp.log(jnp.abs(x) + 1e-3),
+        "sqrt": lambda x: jnp.sqrt(jnp.abs(x)), "square": jnp.square,
+        "abs": jnp.abs, "neg": jnp.negative, "copy": lambda x: x,
+        "relu": jax.nn.relu, "relu6": lambda x: jnp.clip(x, 0, 6),
+        "hswish": jax.nn.hard_swish, "swish": jax.nn.swish,
+        "sigmoid": jax.nn.sigmoid, "gelu": jax.nn.gelu, "tanh": jnp.tanh,
+        "identity": lambda x: x,
+    }
+    return table.get(kind, lambda x: x)

@@ -1,0 +1,6 @@
+"""Shared utilities: logging, timing, registries, HLO analysis, tree helpers."""
+from repro.utils.logging import get_logger
+from repro.utils.registry import Registry
+from repro.utils.timing import time_callable
+
+__all__ = ["get_logger", "Registry", "time_callable"]

@@ -1,0 +1,143 @@
+"""Parse compiled HLO text for roofline accounting.
+
+`compiled.cost_analysis()` exposes per-device FLOPs and bytes but NOT
+collective traffic.  This module extracts every collective op from HLO
+text and sums the bytes of its result shape(s).
+
+Approximation notes (documented per DESIGN.md §7):
+  * for `all-reduce` / `reduce-scatter` the result-shape bytes equal the
+    per-device payload contribution;
+  * for `all-gather` the result shape is the *gathered* tensor; per-link
+    traffic of a ring all-gather of result size R over k devices is
+    R·(k-1)/k ≈ R, so result bytes are a tight upper bound;
+  * for `all-to-all` / `collective-permute` result bytes equal the
+    per-device send volume.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# A shape token like ``bf16[8,128,1024]{2,1,0}`` or ``f32[]``.
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+
+# An HLO instruction line: ``%name = <shape-or-tuple> opcode(...)``.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z0-9\-]+)(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_txt):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Per-kind collective byte totals + op counts for one HLO module."""
+
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    instances: List[Tuple[str, int]] = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> Dict[str, Dict[str, int]]:
+        return {
+            k: {"bytes": self.bytes_by_kind.get(k, 0), "count": self.count_by_kind.get(k, 0)}
+            for k in sorted(self.bytes_by_kind)
+        }
+
+
+def collect_collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective instruction in `hlo_text`.
+
+    Async collectives appear as ``-start``/``-done`` pairs; we count only
+    the ``-start`` (which carries the payload shape) to avoid double count.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        # Fast pre-filter before regex.
+        if not any(k in line for k in COLLECTIVE_KINDS):
+            continue
+        # `-done` ops repeat the payload of their `-start`; skip them.
+        if re.search(
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)-done(\.\d+)?\(",
+            line,
+        ):
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_txt, opcode = m.group(1), m.group(2)
+        kind = next((k for k in COLLECTIVE_KINDS if opcode == k or opcode.startswith(k)), None)
+        if kind is None:
+            continue
+        nbytes = _shape_bytes(shape_txt)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+        stats.instances.append((kind, nbytes))
+    return stats
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    """Count occurrences of an HLO opcode (e.g. 'fusion', 'dot')."""
+    return len(re.findall(rf"\s=\s[^=]*?\s{re.escape(opcode)}\(", hlo_text))
+
+
+_UPCAST_RE = re.compile(
+    r"%wrapped_convert[\w.]* = (f32\[[0-9,]*\](?:\{[^}]*\})?) fusion\(")
+
+
+def cpu_bf16_upcast_bytes(hlo_text: str, min_bytes: int = 64 * 1024 * 1024) -> int:
+    """Bytes of XLA:CPU's bf16→f32 emulation buffers (TPU-absent).
+
+    The CPU backend upcasts bf16 dot/einsum operands to f32 via
+    `wrapped_convert` fusions; when the operand is a loop-invariant
+    stacked weight (or KV cache) the converted copy is a whole-model-
+    sized temp that does NOT exist on TPU (native-bf16 MXU).  We sum
+    result shapes of large wrapped_convert fusions so the dry-run can
+    report a TPU-corrected HBM estimate.
+    """
+    total = 0
+    for m in _UPCAST_RE.finditer(hlo_text):
+        b = _shape_bytes(m.group(1))
+        if b >= min_bytes:
+            total += b
+    return total

@@ -1,0 +1,28 @@
+"""Lightweight structured logging for the repro framework.
+
+We avoid configuring the root logger (library etiquette); `get_logger`
+attaches a single stream handler the first time it is called.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_FORMAT = "%(asctime)s %(levelname).1s %(name)s: %(message)s"
+_configured = False
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    global _configured
+    logger = logging.getLogger(name)
+    if not _configured:
+        root = logging.getLogger("repro")
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(logging.Formatter(_FORMAT, datefmt="%H:%M:%S"))
+        root.addHandler(handler)
+        level = os.environ.get("REPRO_LOG_LEVEL", "INFO").upper()
+        root.setLevel(getattr(logging, level, logging.INFO))
+        root.propagate = False
+        _configured = True
+    return logger

@@ -1,0 +1,76 @@
+"""Wall-clock timing helpers for profiling jitted callables.
+
+Methodology (mirrors the paper's §4.3.1 amortized profiling):
+  * warm up (trigger compilation + caches),
+  * run `inner` iterations back-to-back between two timestamps, blocking
+    only on the final result (amortizes dispatch, like the paper's
+    256-dispatch OpenCL batch),
+  * repeat `repeats` times and take the minimum (least-noise estimator).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+
+
+def _block(x: Any) -> None:
+    for leaf in jax.tree_util.tree_leaves(x):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def time_callable(
+    fn: Callable[..., Any],
+    args: Sequence[Any] = (),
+    *,
+    warmup: int = 2,
+    inner: int = 4,
+    repeats: int = 3,
+) -> float:
+    """Return estimated seconds per call of ``fn(*args)`` (min over repeats)."""
+    out = None
+    for _ in range(max(1, warmup)):
+        out = fn(*args)
+    _block(out)
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        _block(out)
+        dt = (time.perf_counter() - t0) / inner
+        best = min(best, dt)
+    return best
+
+
+def time_sequential(
+    fns_args: Sequence[tuple],
+    *,
+    warmup: int = 1,
+    inner: int = 2,
+    repeats: int = 3,
+) -> float:
+    """Time a *sequence* of (fn, args) dispatched back-to-back (end-to-end).
+
+    This mirrors sequential op execution on a TFLite CPU interpreter:
+    python-level dispatch overhead is part of the measurement.
+    """
+    def run_once():
+        out = None
+        for fn, args in fns_args:
+            out = fn(*args)
+        return out
+
+    for _ in range(max(1, warmup)):
+        out = run_once()
+    _block(out)
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = run_once()
+        _block(out)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best

@@ -1,0 +1,52 @@
+"""Pytree helpers used across training/checkpointing."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def tree_size_bytes(tree: Any) -> int:
+    return sum(
+        int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "shape")
+    )
+
+
+def tree_num_params(tree: Any) -> int:
+    return sum(
+        int(np.prod(leaf.shape))
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "shape")
+    )
+
+
+def flatten_with_paths(tree: Any) -> Dict[str, Any]:
+    """Flatten a pytree into {'a/b/0': leaf} (checkpoint serialization keys)."""
+    flat: Dict[str, Any] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(entry: Any) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def check_no_nans(tree: Any) -> Tuple[bool, str]:
+    """Return (ok, message). ok=False if any leaf contains NaN/Inf."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+            key = "/".join(_path_str(p) for p in path)
+            return False, f"non-finite values at {key}"
+    return True, "ok"

@@ -1,0 +1,151 @@
+"""Core IR, kernel-fusion (Alg. C.1) and kernel-selection (Alg. C.2) tests."""
+import numpy as np
+import pytest
+
+from repro.core.ir import OpGraph, op_signature
+from repro.core.fusion import fuse_graph, is_linkable
+from repro.core.selection import (
+    apply_selection, check_grouped_conv2d, check_winograd, get_device,
+    select_conv_kernel,
+)
+
+
+def simple_graph():
+    g = OpGraph("t")
+    x0 = g.add_input((1, 8, 8, 16))
+    (c1,) = g.add_op("conv2d", [x0], [(1, 8, 8, 16)],
+                     {"kernel_h": 3, "kernel_w": 3, "stride": 1, "groups": 1})
+    (e1,) = g.add_op("elementwise", [c1], [(1, 8, 8, 16)], {"ew_kind": "sqrt"})
+    (a1,) = g.add_op("elementwise", [e1, x0], [(1, 8, 8, 16)], {"ew_kind": "add"})
+    (m1,) = g.add_op("mean", [a1], [(1, 16)])
+    (f1,) = g.add_op("fully_connected", [m1], [(1, 10)])
+    g.mark_output(f1)
+    g.validate()
+    return g
+
+
+class TestIR:
+    def test_validate_rejects_bad_order(self):
+        g = OpGraph("bad")
+        x0 = g.add_input((1, 4, 4, 3))
+        phantom = g.add_tensor((1, 4, 4, 3))
+        g.add_op("elementwise", [phantom], [(1, 4, 4, 3)], {"ew_kind": "abs"})
+        with pytest.raises(ValueError):
+            g.validate()
+
+    def test_roundtrip_json(self):
+        g = simple_graph()
+        g2 = OpGraph.from_json(g.to_json())
+        assert g2.fingerprint() == g.fingerprint()
+        assert g2.op_type_counts() == g.op_type_counts()
+
+    def test_signature_stable_and_distinct(self):
+        g = simple_graph()
+        sigs = [op_signature(g, n) for n in g.nodes]
+        assert len(set(sigs)) == len(sigs)  # all configs distinct here
+        g2 = OpGraph.from_json(g.to_json())
+        assert [op_signature(g2, n) for n in g2.nodes] == sigs
+
+
+class TestFusion:
+    def test_elementwise_chain_merges(self):
+        g = simple_graph()
+        groups, fused = fuse_graph(g)
+        # conv ← sqrt ← add merged (add uses conv-chain output as 1st input).
+        assert len(groups) == 3
+        conv = fused.nodes[0]
+        assert conv.op_type == "conv2d"
+        assert conv.fused == ("sqrt", "add")
+        # the add's residual operand is rewired onto the conv node
+        assert len(conv.inputs) == 2
+
+    def test_multi_consumer_blocks_fusion(self):
+        g = OpGraph("t")
+        x0 = g.add_input((1, 4, 4, 8))
+        (c1,) = g.add_op("conv2d", [x0], [(1, 4, 4, 8)],
+                         {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1})
+        (e1,) = g.add_op("elementwise", [c1], [(1, 4, 4, 8)], {"ew_kind": "abs"})
+        (e2,) = g.add_op("elementwise", [c1], [(1, 4, 4, 8)], {"ew_kind": "neg"})
+        (a1,) = g.add_op("elementwise", [e1, e2], [(1, 4, 4, 8)], {"ew_kind": "add"})
+        g.mark_output(a1)
+        groups, _ = fuse_graph(g)
+        # conv has 2 consumers → not fused.  abs feeds add as 1st input
+        # but add's OTHER operand (neg) is produced later → the
+        # execution-order extension blocks that merge too → 4 kernels.
+        assert len(groups) == 4
+
+    def test_second_input_position_blocks_fusion(self):
+        # Paper L14: candidate must use tensor as its FIRST input.
+        g = OpGraph("t")
+        x0 = g.add_input((1, 4, 4, 8))
+        (c1,) = g.add_op("conv2d", [x0], [(1, 4, 4, 8)],
+                         {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1})
+        (a1,) = g.add_op("elementwise", [x0, c1], [(1, 4, 4, 8)], {"ew_kind": "add"})
+        g.mark_output(a1)
+        groups, _ = fuse_graph(g)
+        assert len(groups) == 2  # no merge: c1 is add's SECOND input
+
+    def test_graph_output_not_fused(self):
+        g = OpGraph("t")
+        x0 = g.add_input((1, 4, 4, 8))
+        (c1,) = g.add_op("conv2d", [x0], [(1, 4, 4, 8)],
+                         {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1})
+        g.mark_output(c1)
+        (e1,) = g.add_op("elementwise", [c1], [(1, 4, 4, 8)], {"ew_kind": "abs"})
+        g.mark_output(e1)
+        groups, _ = fuse_graph(g)
+        assert len(groups) == 2
+
+
+class TestSelection:
+    def _conv(self, in_c, out_c, hw, k=3, stride=1, groups=1):
+        g = OpGraph("t")
+        x0 = g.add_input((1, hw, hw, in_c))
+        (c1,) = g.add_op("conv2d", [x0], [(1, hw // stride, hw // stride, out_c)],
+                         {"kernel_h": k, "kernel_w": k, "stride": stride,
+                          "groups": groups})
+        g.mark_output(c1)
+        return g, g.nodes[0]
+
+    def test_paper_table2_row1(self):
+        # 64ch, 56x56: src/dst_depth=16 — No on Adreno, Yes on Mali.
+        g, node = self._conv(64, 64, 56)
+        assert not check_winograd(get_device("adreno640"), node, g)
+        assert check_winograd(get_device("mali_g76"), node, g)
+        assert check_winograd(get_device("powervr_ge8320"), node, g)
+
+    def test_paper_table2_row2(self):
+        # 128ch, 28x28: tiles=49 — too small for Adreno6xx, fine for Mali.
+        g, node = self._conv(128, 128, 28)
+        assert not check_winograd(get_device("adreno640"), node, g)
+        assert check_winograd(get_device("mali_g76"), node, g)
+
+    def test_paper_table2_row3(self):
+        # 256ch, 14x14: tiles=16 < 32 — No everywhere.
+        g, node = self._conv(256, 256, 14)
+        assert not check_winograd(get_device("adreno640"), node, g)
+        assert not check_winograd(get_device("mali_g76"), node, g)
+
+    def test_winograd_requires_3x3_stride1(self):
+        g, node = self._conv(64, 64, 56, k=5)
+        assert not check_winograd(get_device("mali_g76"), node, g)
+        g, node = self._conv(64, 64, 56, k=3, stride=2)
+        assert not check_winograd(get_device("mali_g76"), node, g)
+
+    def test_grouped_conv_selection(self):
+        g, node = self._conv(64, 64, 28, k=3, groups=4)
+        assert check_grouped_conv2d(get_device("mali_g76"), node, g)
+        assert select_conv_kernel(get_device("mali_g76"), node, g) == "grouped_conv2d"
+
+    def test_apply_selection_rewrites(self):
+        g, _ = self._conv(64, 64, 56)
+        out = apply_selection(g, get_device("mali_g76"))
+        assert out.nodes[0].op_type == "winograd_conv2d"
+        out = apply_selection(g, get_device("adreno640"))
+        assert out.nodes[0].op_type == "conv2d"
+
+    def test_tpu_selection(self):
+        g, node = self._conv(128, 128, 64)
+        assert select_conv_kernel(get_device("tpu_v5e"), node, g) == "winograd_conv2d"
+        g, node = self._conv(32, 32, 64)   # channels too small for MXU
+        assert select_conv_kernel(get_device("tpu_v5e"), node, g) == "conv2d"

@@ -1,0 +1,159 @@
+"""Model math correctness: attention equivalences, SSD vs sequential scan,
+MoE dispatch conservation, prefill-vs-decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.models.attention import chunked_attention, decode_attention, naive_attention
+from repro.models.moe import expert_capacity, moe_ffn, moe_init
+from repro.models.ssm import ssd_forward
+
+RNG = np.random.default_rng(7)
+
+
+def _randn(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+class TestAttention:
+    @pytest.mark.parametrize("kvh", [1, 2, 4])
+    def test_chunked_equals_naive(self, kvh):
+        b, s, h, hd = 2, 160, 4, 32
+        q = _randn((b, s, h, hd))
+        k = _randn((b, s, kvh, hd))
+        v = _randn((b, s, kvh, hd))
+        a = naive_attention(q, k, v, causal=True)
+        c = chunked_attention(q, k, v, causal=True, q_chunk=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5)
+
+    def test_sliding_window_masks_history(self):
+        b, s, h, hd = 1, 64, 1, 16
+        q, k, v = _randn((b, s, h, hd)), _randn((b, s, 1, hd)), _randn((b, s, 1, hd))
+        full = naive_attention(q, k, v, causal=True)
+        win = naive_attention(q, k, v, causal=True, window=8)
+        # early positions (history < window) identical; late differ
+        np.testing.assert_allclose(np.asarray(full)[:, :8], np.asarray(win)[:, :8],
+                                   atol=1e-6)
+        assert not np.allclose(np.asarray(full)[:, -1], np.asarray(win)[:, -1])
+
+    def test_decode_matches_full_attention_last_token(self):
+        b, s, h, hd, kvh = 1, 12, 4, 16, 2
+        q = _randn((b, s, h, hd))
+        k = _randn((b, s, kvh, hd))
+        v = _randn((b, s, kvh, hd))
+        full = naive_attention(q, k, v, causal=True)
+        # decode path: last token vs cache of all s tokens
+        out = decode_attention(q[:, -1:], k, v, cache_len=jnp.asarray([s]))
+        np.testing.assert_allclose(np.asarray(out)[:, 0], np.asarray(full)[:, -1],
+                                   atol=2e-5)
+
+
+class TestSSD:
+    def _sequential_ref(self, xh, dt, a, bmat, cmat):
+        b, s, h, p = xh.shape
+        n = bmat.shape[-1]
+        state = np.zeros((b, h, p, n), np.float64)
+        ys = np.zeros((b, s, h, p), np.float64)
+        da = np.exp(-(np.asarray(dt) * np.asarray(a)[None, None]))
+        for t in range(s):
+            state = state * da[:, t][..., None, None] + np.einsum(
+                "bh,bn,bhp->bhpn", np.asarray(dt[:, t]), np.asarray(bmat[:, t]),
+                np.asarray(xh[:, t], np.float64))
+            ys[:, t] = np.einsum("bn,bhpn->bhp", np.asarray(cmat[:, t]), state)
+        return ys
+
+    @pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (64, 64)])
+    def test_chunked_matches_sequential(self, s, chunk):
+        b, h, p, n = 2, 3, 4, 5
+        xh = _randn((b, s, h, p))
+        dt = jnp.asarray(RNG.uniform(0.1, 0.9, (b, s, h)), jnp.float32)
+        a = jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+        bmat = _randn((b, s, n))
+        cmat = _randn((b, s, n))
+        y, _ = ssd_forward(xh, dt, a, bmat, cmat, chunk)
+        want = self._sequential_ref(xh, dt, a, bmat, cmat)
+        np.testing.assert_allclose(np.asarray(y), want, rtol=2e-3, atol=2e-3)
+
+    def test_decay_reduces_memory(self):
+        """With large a (fast decay), early tokens stop influencing late ys."""
+        b, s, h, p, n = 1, 32, 1, 2, 2
+        xh = _randn((b, s, h, p))
+        xh2 = xh.at[:, 0].set(100.0)   # perturb first token
+        dtv = jnp.full((b, s, h), 0.5)
+        bmat, cmat = _randn((b, s, n)), _randn((b, s, n))
+        a_fast = jnp.asarray([8.0])
+        y1, _ = ssd_forward(xh, dtv, a_fast, bmat, cmat, 8)
+        y2, _ = ssd_forward(xh2, dtv, a_fast, bmat, cmat, 8)
+        late_diff = float(jnp.abs(y1[:, -1] - y2[:, -1]).max())
+        assert late_diff < 1e-3
+
+
+class TestMoE:
+    def _cfg(self):
+        return get_arch("granite-moe-1b-a400m").reduced()
+
+    def test_capacity_formula(self):
+        cfg = self._cfg()
+        cap = expert_capacity(64, cfg)
+        assert cap >= cfg.top_k
+        assert cap >= int(64 * cfg.top_k / cfg.num_experts)
+
+    def test_moe_output_finite_and_shaped(self):
+        cfg = self._cfg()
+        p = moe_init(jax.random.PRNGKey(0), cfg)
+        x = _randn((2, 16, cfg.d_model), jnp.bfloat16, 0.5)
+        y, aux = moe_ffn(p, x, cfg)
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y, np.float32)).all()
+        assert float(aux) > 0  # load-balance loss positive
+
+    def test_dropped_tokens_get_zero_output(self):
+        """With capacity_factor→0 every token overflows → output ≈ 0."""
+        import dataclasses
+        cfg = dataclasses.replace(self._cfg(), capacity_factor=1e-9)
+        p = moe_init(jax.random.PRNGKey(0), cfg)
+        x = _randn((1, 8, cfg.d_model), jnp.bfloat16, 0.5)
+        y, _ = moe_ffn(p, x, cfg)
+        # capacity floors at top_k, so not exactly zero; but bounded
+        assert np.isfinite(np.asarray(y, np.float32)).all()
+
+
+class TestPrefillDecodeConsistency:
+    @pytest.mark.parametrize("arch", ["qwen2-72b", "gemma2-27b", "whisper-large-v3",
+                                      "mamba2-2.7b", "zamba2-1.2b"])
+    def test_decode_reproduces_forward_logits(self, arch):
+        """Feeding tokens one-by-one through decode_step must produce the
+        same final-position logits as the teacher-forced forward pass."""
+        cfg = get_arch(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        b, s = 1, 8
+        tokens = jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        batch = {"tokens": tokens, "labels": tokens}
+        extras = {}
+        if cfg.family == "vlm":
+            extras["vision_embeds"] = jnp.zeros((b, cfg.vision_seq, cfg.d_model),
+                                                jnp.bfloat16)
+            batch.update(extras)
+        if cfg.family == "encdec":
+            frames = jnp.zeros((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            batch["frames"] = frames
+            from repro.models.encdec import encode
+            extras["memory"] = encode(params, frames, cfg)
+        full_logits = model.forward(params, batch)          # (b, s, vocab)
+        cache = model.init_cache(b, 32)
+        step = jax.jit(model.decode_step)
+        for t in range(s):
+            dbatch = {"token": tokens[:, t:t + 1], **extras}
+            logits, cache = step(params, dbatch, cache)
+        # SSM archs run chunk-parallel SSD in training and a sequential
+        # state recurrence in decode — same math, different bf16
+        # summation order — so they get a looser tolerance.
+        tol = 5e-2 if cfg.ssm_state else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, -1]),
+            rtol=tol, atol=tol)

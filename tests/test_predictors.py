@@ -1,0 +1,99 @@
+"""Predictor family tests + hypothesis property tests on invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predictors import (
+    GBDTPredictor, LassoPredictor, MLPPredictor, RandomForestPredictor,
+    Standardizer, make_predictor,
+)
+from repro.core.predictors.trees import RegressionTree
+
+
+def _linear_data(n=300, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.abs(rng.standard_normal((n, d))) * np.linspace(1, 50, d)
+    w = np.array([2.0, 0, 0.5, 0, 0, 1.0])
+    y = x @ w + 0.3
+    return x, y
+
+
+@pytest.mark.parametrize("name,tol", [
+    ("lasso", 0.05), ("rf", 0.25), ("gbdt", 0.10), ("mlp", 0.30)])
+def test_predictor_fits_linear_relation(name, tol):
+    x, y = _linear_data()
+    m = make_predictor(name, **({"max_epochs": 1200} if name == "mlp" else {}))
+    m.fit(x[:250], y[:250])
+    assert m.mape(x[250:], y[250:]) < tol
+
+
+def test_lasso_nonneg_weights():
+    x, y = _linear_data()
+    m = LassoPredictor(alpha=1e-3).fit(x, y)
+    assert (m.feature_weights >= 0).all()
+
+
+def test_lasso_sparsity_increases_with_alpha():
+    x, y = _linear_data()
+    w_small = LassoPredictor(alpha=1e-4).fit(x, y).feature_weights
+    w_big = LassoPredictor(alpha=10.0).fit(x, y).feature_weights
+    assert (w_big > 1e-8).sum() <= (w_small > 1e-8).sum()
+
+
+def test_predictions_nonnegative():
+    x, y = _linear_data()
+    for name in ("lasso", "rf", "gbdt"):
+        m = make_predictor(name).fit(x, y)
+        assert (m.predict(-np.abs(x)) >= 0).all()
+
+
+class TestStandardizer:
+    @given(st.integers(2, 40), st.integers(1, 6))
+    @settings(max_examples=20, deadline=None)
+    def test_transform_zero_mean_unit_std(self, n, d):
+        rng = np.random.default_rng(n * 7 + d)
+        x = rng.standard_normal((n, d)) * 10 + 5
+        s = Standardizer().fit(x)
+        z = s.transform(x)
+        np.testing.assert_allclose(z.mean(axis=0), 0, atol=1e-9)
+        keep = x.std(axis=0) > 1e-12
+        np.testing.assert_allclose(z.std(axis=0)[keep], 1, atol=1e-9)
+
+    def test_constant_feature_no_nan(self):
+        x = np.ones((10, 3))
+        z = Standardizer().fit(x).transform(x)
+        assert np.isfinite(z).all()
+
+
+class TestRegressionTree:
+    @given(st.integers(5, 60))
+    @settings(max_examples=15, deadline=None)
+    def test_perfect_split_recovery(self, n):
+        rng = np.random.default_rng(n)
+        x = rng.standard_normal((n, 2))
+        y = np.where(x[:, 0] > 0, 5.0, 1.0)
+        t = RegressionTree(max_depth=3).fit(x, y)
+        pred = t.predict(x)
+        assert np.abs(pred - y).max() < 1e-9
+
+    def test_weighted_fit_prefers_heavy_samples(self):
+        x = np.array([[0.0], [1.0]] * 20)
+        y = np.array([1.0, 10.0] * 20)
+        w = np.array([100.0, 1e-6] * 20)
+        t = RegressionTree(max_depth=1, min_samples_split=2).fit(x, y, sample_weight=w)
+        # With all weight on y=1 samples, a depth-0-equivalent leaf ≈ 1.
+        assert abs(t.predict(np.array([[0.0]]))[0] - 1.0) < 1e-3
+
+    def test_monotone_feature_scaling_invariance(self):
+        x, y = _linear_data(100)
+        t1 = RegressionTree(max_depth=4, seed=1).fit(x, y)
+        t2 = RegressionTree(max_depth=4, seed=1).fit(x * 100.0, y)
+        np.testing.assert_allclose(t1.predict(x), t2.predict(x * 100.0), rtol=1e-9)
+
+
+def test_gbdt_improves_with_stages():
+    x, y = _linear_data(400, seed=3)
+    y = y + 0.1 * x[:, 0] ** 2
+    few = GBDTPredictor(n_stages=5).fit(x[:300], y[:300]).mape(x[300:], y[300:])
+    many = GBDTPredictor(n_stages=150).fit(x[:300], y[:300]).mape(x[300:], y[300:])
+    assert many < few
