@@ -14,6 +14,11 @@ import time
 import traceback
 
 BENCHES = [
+    # Pipeline rows are self-contained (no prebuilt datasets): the full
+    # ProfileStore → PredictorHub → LatencyService.predict_e2e path and
+    # the OpGraph adjacency-index microbenchmark.
+    ("pipeline", "benchmarks.bench_pipeline"),                # docs/PIPELINE.md
+    ("graph_index", "benchmarks.bench_graph_index"),          # docs/PIPELINE.md
     ("multicore", "benchmarks.bench_multicore"),              # Fig. 2/3
     ("quantization", "benchmarks.bench_quantization"),        # Fig. 4/5
     ("fusion", "benchmarks.bench_fusion"),                    # Fig. 6/7

@@ -2,18 +2,26 @@
 
 Search the synthetic NAS space for the architecture with the best
 (proxy) quality under a latency budget, WITHOUT measuring candidates:
-the trained predictor bank scores every candidate (paper §1: measuring
-every candidate on-device is impractical; predictions make search
-scale).  Verifies the winner's predicted latency by actually measuring.
+`LatencyService.predict_batch` scores all 200 candidates in one batched
+query (paper §1: measuring every candidate on-device is impractical;
+predictions make search scale).  Verifies the winner's predicted
+latency by actually measuring — through the same ProfileStore, so the
+verification measurement is itself persisted for future runs.
 
   PYTHONPATH=src python examples/nas_latency_search.py
 """
+import os
+
 import numpy as np
 
-from repro.core.dataset import build_dataset, fit_predictor_bank, synthetic_graphs
+from repro.core.dataset import synthetic_graphs
+from repro.core.features import featurize
 from repro.core.nas_space import NASSpaceConfig, sample_architecture
 from repro.core.profiler import DeviceSetting, ProfileSession
-from repro.core.features import featurize
+from repro.pipeline import LatencyService
+
+STORE = os.path.join(os.path.dirname(__file__), "..", "reports",
+                     "nas_search_store.jsonl")
 
 
 def proxy_quality(graph) -> float:
@@ -27,28 +35,35 @@ def proxy_quality(graph) -> float:
 
 def main() -> None:
     setting = DeviceSetting("cpu_f32", "float32", "op_by_op")
-    session = ProfileSession(repeats=2, inner=3)
     print("== profile 25 architectures to train the predictor ==")
     train_graphs = synthetic_graphs(25, resolution=32)
-    ds = build_dataset(train_graphs, setting, session=session)
-    bank = fit_predictor_bank(ds, "gbdt", overhead_model="affine")
+    svc = LatencyService.build(
+        train_graphs, setting,
+        store=STORE,
+        session=ProfileSession(repeats=2, inner=3),
+        predictor="gbdt", overhead_model="affine",
+    )
 
-    print("== score 200 candidates by PREDICTED latency (no measurement) ==")
-    budget_s = float(np.median(ds.e2e()) * 0.8)
-    best, best_q = None, -1e30
+    print("== score 200 candidates by PREDICTED latency (one batched query) ==")
+    # Budget from THIS run's training suite (the store may also hold
+    # records from earlier runs, e.g. previously verified winners).
+    e2e = np.asarray([svc.store.get_arch(setting, g.fingerprint()).e2e_s
+                      for g in train_graphs])
+    budget_s = float(np.median(e2e) * 0.8)
     cfg = NASSpaceConfig(resolution=32)
-    for seed in range(1000, 1200):
-        cand = sample_architecture(seed, cfg)
-        pred = bank.predict_graph(cand)
+    candidates = [sample_architecture(seed, cfg) for seed in range(1000, 1200)]
+    reports = svc.predict_batch(candidates)
+    best, best_q, best_pred = None, -1e30, None
+    for cand, rep in zip(candidates, reports):
         q = proxy_quality(cand)
-        if pred <= budget_s and q > best_q:
-            best, best_q, best_pred = cand, q, pred
+        if rep.e2e_s <= budget_s and q > best_q:
+            best, best_q, best_pred = cand, q, rep.e2e_s
     assert best is not None, "no candidate met the budget"
     print(f"budget {1e3 * budget_s:.2f} ms → winner {best.name} "
           f"(predicted {1e3 * best_pred:.2f} ms, quality {best_q:.2f})")
 
-    print("== verify the winner by measurement ==")
-    rec = session.profile_graph(best, setting)
+    print("== verify the winner by measurement (persisted to the store) ==")
+    rec = svc.session.profile_graph(best, setting)
     err = abs(best_pred - rec.e2e_s) / rec.e2e_s
     print(f"measured {1e3 * rec.e2e_s:.2f} ms — prediction error {100 * err:.1f}%")
 

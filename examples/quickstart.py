@@ -1,37 +1,57 @@
 """Quickstart: the paper's pipeline end-to-end in ~2 minutes.
 
 1. sample synthetic NAS architectures (paper §4.3.2),
-2. profile per-op + end-to-end latency on this machine (the "device"),
-3. train per-op-type predictors (paper §4.2),
+2. profile them into a persistent ProfileStore (re-running this script
+   is free: warm signatures are never re-measured),
+3. train per-op-type predictors (paper §4.2) via LatencyService.build,
 4. predict end-to-end latency of unseen architectures — the exact
    NAS-time use case — and report MAPE,
 5. deduce GPU-delegate kernels (fusion + selection) for one arch.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+import os
 
-from repro.core.dataset import build_dataset, fit_predictor_bank, evaluate_bank, synthetic_graphs
+from repro.core.dataset import synthetic_graphs
+from repro.core.composition import mape
 from repro.core.fusion import fuse_graph
 from repro.core.profiler import DeviceSetting, ProfileSession
 from repro.core.selection import apply_selection, get_device
+from repro.pipeline import LatencyService
+
+STORE = os.path.join(os.path.dirname(__file__), "..", "reports",
+                     "quickstart_store.jsonl")
 
 
 def main() -> None:
-    print("== 1-2. sample + profile 30 synthetic NAS architectures ==")
+    print("== 1-3. profile 30 synthetic NAS archs into a store, train GBDT ==")
     graphs = synthetic_graphs(30, resolution=32)
-    ds = build_dataset(graphs, DeviceSetting("cpu_f32", "float32", "op_by_op"),
-                       session=ProfileSession(repeats=2, inner=3))
-    print(f"profiled {len(ds.archs)} archs; e2e range "
-          f"{1e3 * ds.e2e().min():.2f}–{1e3 * ds.e2e().max():.2f} ms")
+    train, test = graphs[:24], graphs[24:]
+    svc = LatencyService.build(
+        graphs,
+        DeviceSetting("cpu_f32", "float32", "op_by_op"),
+        store=STORE,
+        session=ProfileSession(repeats=2, inner=3),
+        predictor="gbdt",
+        overhead_model="affine",
+        train_graphs=train,                    # hold out the last 6
+    )
+    print(f"store: {svc.store.stats()}  "
+          f"(new measurements this run: {svc.session.measured_ops})")
 
-    print("\n== 3-4. train GBDT per-op predictors on 24, test on 6 ==")
-    bank = fit_predictor_bank(ds, "gbdt", train_idx=list(range(24)),
-                              overhead_model="affine")
-    res = evaluate_bank(ds, bank, test_idx=list(range(24, 30)))
-    print(f"end-to-end latency MAPE on unseen archs: {100 * res['e2e_mape']:.1f}%")
-    for t, m in sorted(res["per_op_mape"].items()):
-        print(f"  {t:16s} MAPE {100 * m:5.1f}%")
+    print("\n== 4. predict the 6 unseen archs in one batched query ==")
+    reports = svc.predict_batch(test)
+    y_true = [svc.store.get_arch(svc.default_setting, g.fingerprint()).e2e_s
+              for g in test]
+    y_pred = [r.e2e_s for r in reports]
+    print(f"end-to-end latency MAPE on unseen archs: "
+          f"{100 * mape(y_true, y_pred):.1f}%")
+    for g, r, yt in zip(test, reports, y_true):
+        print(f"  {g.name:24s} measured {1e3 * yt:6.2f} ms   "
+              f"predicted {1e3 * r.e2e_s:6.2f} ms")
+    again = svc.predict_e2e(test[0])
+    print(f"repeat query served from cache: {again.from_cache} "
+          f"({svc.cache_info()})")
 
     print("\n== 5. kernel deduction for arch #0 on a Mali-class GPU ==")
     g = graphs[0]

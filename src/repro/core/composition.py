@@ -61,6 +61,26 @@ class PredictorBank:
             _, g = fuse_graph(graph)
         return [(n.op_type, self.predict_op(g, n)) for n in g.nodes]
 
+    # -- serialization --------------------------------------------------------
+    def to_json(self) -> Dict:
+        return {
+            "setting": self.setting,
+            "overhead": self.overhead,
+            "overhead_per_kernel": self.overhead_per_kernel,
+            "op_sum_scale": self.op_sum_scale,
+            "predictors": {t: p.to_json() for t, p in sorted(self.predictors.items())},
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "PredictorBank":
+        from repro.core.predictors.base import load_predictor
+
+        bank = cls(setting=d["setting"], overhead=float(d["overhead"]),
+                   overhead_per_kernel=float(d["overhead_per_kernel"]),
+                   op_sum_scale=float(d["op_sum_scale"]))
+        bank.predictors = {t: load_predictor(p) for t, p in d["predictors"].items()}
+        return bank
+
 
 def estimate_overhead(e2e_measured: Sequence[float],
                       op_sums: Sequence[float]) -> float:
@@ -99,10 +119,14 @@ def estimate_affine(e2e_measured: Sequence[float],
 
 
 def mape(y_true: Sequence[float], y_pred: Sequence[float]) -> float:
-    """Mean absolute percentage error (paper's L_MAPE)."""
+    """Mean absolute percentage error (paper's L_MAPE).
+
+    The denominator is clamped as max(|y|, 1e-12): a `y == 0` guard alone
+    leaves negative-or-tiny labels dividing unprotected.
+    """
     yt = np.asarray(y_true, dtype=np.float64)
     yp = np.asarray(y_pred, dtype=np.float64)
-    return float(np.mean(np.abs((yp - yt) / np.where(yt == 0, 1e-12, yt))))
+    return float(np.mean(np.abs((yp - yt) / np.maximum(np.abs(yt), 1e-12))))
 
 
 def mape_per_type(records: Sequence[Tuple[str, float, float]]) -> Dict[str, float]:

@@ -89,13 +89,22 @@ def build_dataset(
     setting: DeviceSetting,
     cache_path: Optional[str] = None,
     session: Optional[ProfileSession] = None,
+    store: Optional[Any] = None,
 ) -> LatencyDataset:
+    """Profile ``graphs`` (or load the JSON cache) into a LatencyDataset.
+
+    ``store`` (a `repro.pipeline.ProfileStore`) makes profiling
+    incremental across processes: already-measured signatures are read
+    back instead of re-measured, and new measurements are persisted.
+    """
     if cache_path and os.path.exists(cache_path):
         ds = LatencyDataset.load(cache_path)
         if len(ds.archs) >= len(graphs):
             log.info("loaded cached dataset %s (%d archs)", cache_path, len(ds.archs))
             return ds
-    session = session or ProfileSession()
+    session = session or ProfileSession(store=store)
+    if store is not None and session.store is None:
+        session.store = store
     t0 = time.time()
     archs = session.profile_suite(graphs, setting)
     log.info("profiled %d archs under %s in %.0fs",

@@ -65,12 +65,21 @@ def fuse_graph(graph: OpGraph) -> Tuple[List[FusionGroup], OpGraph]:
     # TFLite applies the pass until no merge happens (chains of element-wise
     # ops collapse into one kernel).
     alive: List[OpNode] = list(graph.nodes)
+    graph_outputs = set(graph.output_ids)
     changed = True
     while changed:
         changed = False
         removed: Set[int] = set()
         new_alive: List[OpNode] = []
         ready_tensors: Set[int] = set(graph.input_ids)
+        # Per-pass consumer index (tid → [(op_id, node, input position)]),
+        # replacing the former O(N) scan per node: each pass is O(N + E).
+        # Built from the pass's start-of-pass `alive` snapshot, exactly the
+        # list the removed scan iterated.
+        consumers: Dict[int, List[Tuple[int, OpNode, int]]] = {}
+        for n in alive:
+            for k, src in enumerate(n.inputs):
+                consumers.setdefault(src, []).append((n.op_id, n, k))
         for cur in alive:
             if cur.op_id in removed:
                 continue
@@ -80,20 +89,18 @@ def fuse_graph(graph: OpGraph) -> Tuple[List[FusionGroup], OpGraph]:
                 new_alive.append(cur)
                 continue
             out_t = cur.outputs[0]
-            if out_t in graph.output_ids:
+            if out_t in graph_outputs:
                 # Graph outputs must materialize; cannot be fused away.
                 new_alive.append(cur)
                 continue
             # L7-13: find candidate consumers and the input position used.
             candidates = []
             cand_index = 0
-            for nxt in alive:
-                if nxt.op_id == cur.op_id or nxt.op_id in removed:
+            for oid, nxt, k in consumers.get(out_t, ()):
+                if oid == cur.op_id or oid in removed:
                     continue
-                for k, src in enumerate(nxt.inputs):
-                    if src == out_t:
-                        cand_index = k
-                        candidates.append(nxt)
+                cand_index = k
+                candidates.append(nxt)
             if len(candidates) != 1 or cand_index != 0:  # L14-15
                 new_alive.append(cur)
                 continue

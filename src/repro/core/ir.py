@@ -145,6 +145,12 @@ class OpGraph:
         self.output_ids: List[int] = []
         self._next_tensor = 0
         self._next_op = 0
+        # Lazily-built adjacency index (node count when built, consumers
+        # by tensor id, producer by tensor id); None until first query.
+        self._adj: Optional[Tuple[int, Dict[int, List[OpNode]], Dict[int, OpNode]]] = None
+        # Memoized fingerprint, guarded by (nodes, tensors, outputs) counts
+        # so builder-style direct appends are caught like in _adjacency.
+        self._fp: Optional[Tuple[Tuple[int, int, int], str]] = None
 
     # -- construction -------------------------------------------------------
     def add_tensor(self, shape: Sequence[int], dtype: str = "float32") -> int:
@@ -182,20 +188,37 @@ class OpGraph:
         )
         self._next_op += 1
         self.nodes.append(node)
+        self._adj = None
         return outs
 
     def mark_output(self, tid: int) -> None:
         self.output_ids.append(tid)
 
     # -- queries ------------------------------------------------------------
+    def _adjacency(self) -> Tuple[Dict[int, List[OpNode]], Dict[int, OpNode]]:
+        """Consumers/producer maps, rebuilt when ``nodes`` grows.
+
+        The node-count guard also covers builders (fusion, selection,
+        from_json) that append to ``nodes`` directly after construction.
+        """
+        if self._adj is None or self._adj[0] != len(self.nodes):
+            cons: Dict[int, List[OpNode]] = {}
+            prod: Dict[int, OpNode] = {}
+            for n in self.nodes:
+                for t in n.inputs:
+                    lst = cons.setdefault(t, [])
+                    if not lst or lst[-1] is not n:   # one entry per node
+                        lst.append(n)
+                for t in n.outputs:
+                    prod[t] = n
+            self._adj = (len(self.nodes), cons, prod)
+        return self._adj[1], self._adj[2]
+
     def consumers(self, tid: int) -> List[OpNode]:
-        return [n for n in self.nodes if tid in n.inputs]
+        return list(self._adjacency()[0].get(tid, ()))
 
     def producer(self, tid: int) -> Optional[OpNode]:
-        for n in self.nodes:
-            if tid in n.outputs:
-                return n
-        return None
+        return self._adjacency()[1].get(tid)
 
     def tensor(self, tid: int) -> TensorInfo:
         return self.tensors[tid]
@@ -275,8 +298,12 @@ class OpGraph:
         return g
 
     def fingerprint(self) -> str:
-        blob = json.dumps(self.to_json(), sort_keys=True).encode()
-        return hashlib.sha256(blob).hexdigest()[:16]
+        """Content hash of the graph (cached — LRU lookups re-query it)."""
+        guard = (len(self.nodes), len(self.tensors), len(self.output_ids))
+        if self._fp is None or self._fp[0] != guard:
+            blob = json.dumps(self.to_json(), sort_keys=True).encode()
+            self._fp = (guard, hashlib.sha256(blob).hexdigest()[:16])
+        return self._fp[1]
 
 
 def op_signature(graph: OpGraph, node: OpNode) -> str:

@@ -5,6 +5,7 @@ from repro.core.predictors.base import (
     Standardizer,
     cross_val_mape,
     grid_search,
+    load_predictor,
     relative_weights,
 )
 from repro.core.predictors.gbdt import GBDTPredictor, fit_gbdt_with_cv
@@ -14,8 +15,9 @@ from repro.core.predictors.random_forest import RandomForestPredictor, fit_rf_wi
 
 __all__ = [
     "PREDICTORS", "Predictor", "Standardizer", "cross_val_mape", "grid_search",
-    "relative_weights", "LassoPredictor", "RandomForestPredictor",
-    "GBDTPredictor", "MLPPredictor", "fit_rf_with_cv", "fit_gbdt_with_cv",
+    "load_predictor", "relative_weights", "LassoPredictor",
+    "RandomForestPredictor", "GBDTPredictor", "MLPPredictor", "fit_rf_with_cv",
+    "fit_gbdt_with_cv",
 ]
 
 

@@ -81,7 +81,42 @@ class Predictor:
     def mape(self, x: np.ndarray, y: np.ndarray) -> float:
         y = np.asarray(y, dtype=np.float64)
         pred = self.predict(x)
-        return float(np.mean(np.abs((pred - y) / np.where(y == 0, 1e-12, y))))
+        # Clamp |y|: np.where(y == 0, ...) left negative-or-tiny labels
+        # dividing unprotected (|y| < 1e-12 explodes the metric).
+        return float(np.mean(np.abs((pred - y) / np.maximum(np.abs(y), 1e-12))))
+
+    # -- serialization --------------------------------------------------------
+    # Subclasses implement `_config_json` (constructor kwargs sufficient to
+    # rebuild an unfitted instance) and `_state_to_json`/`_state_from_json`
+    # (the fitted state).  `load_predictor` gives the full round-trip.
+    def _config_json(self) -> Dict[str, Any]:
+        raise NotImplementedError(f"{self.name} is not serializable")
+
+    def _state_to_json(self) -> Dict[str, Any]:
+        raise NotImplementedError(f"{self.name} is not serializable")
+
+    def _state_from_json(self, d: Dict[str, Any]) -> None:
+        raise NotImplementedError(f"{self.name} is not serializable")
+
+    def to_json(self) -> Dict[str, Any]:
+        if self.scaler.mean is None:
+            raise RuntimeError(f"cannot serialize unfitted {self.name} predictor")
+        return {
+            "name": self.name,
+            "config": self._config_json(),
+            "scaler": self.scaler.to_json(),
+            "state": self._state_to_json(),
+        }
+
+
+def load_predictor(d: Dict[str, Any]) -> "Predictor":
+    """Rebuild a fitted predictor from `Predictor.to_json` output."""
+    import repro.core.predictors  # noqa: F401 — populate the registry
+
+    model: Predictor = PREDICTORS.get(d["name"])(**d["config"])
+    model.scaler = Standardizer.from_json(d["scaler"])
+    model._state_from_json(d["state"])
+    return model
 
 
 def relative_weights(y: np.ndarray) -> np.ndarray:

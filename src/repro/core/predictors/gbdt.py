@@ -70,6 +70,20 @@ class GBDTPredictor(Predictor):
             out += self.learning_rate * tree.predict(xs)
         return out
 
+    # -- serialization --------------------------------------------------------
+    def _config_json(self):
+        return {"n_stages": self.n_stages, "learning_rate": self.learning_rate,
+                "max_depth": self.max_depth,
+                "min_samples_split": self.min_samples_split, "seed": self.seed,
+                "relative": self.relative, "subsample": self.subsample}
+
+    def _state_to_json(self):
+        return {"f0": self.f0, "trees": [t.to_json() for t in self.trees]}
+
+    def _state_from_json(self, d):
+        self.f0 = float(d["f0"])
+        self.trees = [RegressionTree.from_json(t) for t in d["trees"]]
+
 
 def fit_gbdt_with_cv(x: np.ndarray, y: np.ndarray,
                      grid: Sequence[dict] = DEFAULT_GRID,

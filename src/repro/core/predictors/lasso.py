@@ -148,6 +148,18 @@ class LassoPredictor(Predictor):
             raise RuntimeError("not fitted")
         return self._apply(xs, self.w)
 
+    # -- serialization --------------------------------------------------------
+    def _config_json(self):
+        return {"alpha": self.alpha, "alpha_grid": list(self.alpha_grid),
+                "iters": self.iters, "fit_intercept": self.fit_intercept,
+                "seed": self.seed}
+
+    def _state_to_json(self):
+        return {"w": None if self.w is None else self.w.tolist()}
+
+    def _state_from_json(self, d):
+        self.w = None if d["w"] is None else np.asarray(d["w"], dtype=np.float64)
+
     @property
     def feature_weights(self) -> np.ndarray:
         """Magnitudes used for the paper's §5.5.2 feature-importance study."""

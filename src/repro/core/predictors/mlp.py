@@ -120,3 +120,24 @@ class MLPPredictor(Predictor):
             raise RuntimeError("not fitted")
         params = jax.tree_util.tree_map(jnp.asarray, self.params)
         return np.asarray(_forward(params, jnp.asarray(xs))) * self.y_scale
+
+    # -- serialization --------------------------------------------------------
+    def _config_json(self):
+        return {"hidden_layers": self.hidden_layers, "width": self.width,
+                "lr": self.lr, "weight_decay": self.weight_decay,
+                "max_epochs": self.max_epochs, "patience": self.patience,
+                "val_frac": self.val_frac, "seed": self.seed}
+
+    def _state_to_json(self):
+        return {
+            "y_scale": self.y_scale,
+            "params": [[w.tolist(), b.tolist()] for w, b in self.params],
+        }
+
+    def _state_from_json(self, d):
+        self.y_scale = float(d["y_scale"])
+        # float32 restores the trained dtype exactly (f32 → repr → f32 is
+        # lossless), so reloaded predictions are bit-identical.
+        self.params = [(np.asarray(w, dtype=np.float32),
+                        np.asarray(b, dtype=np.float32))
+                       for w, b in d["params"]]

@@ -56,6 +56,19 @@ class RandomForestPredictor(Predictor):
         preds = np.stack([t.predict(xs) for t in self.trees])
         return preds.mean(axis=0)
 
+    # -- serialization --------------------------------------------------------
+    def _config_json(self):
+        return {"n_trees": self.n_trees,
+                "min_samples_split": self.min_samples_split,
+                "max_depth": self.max_depth, "max_features": self.max_features,
+                "seed": self.seed, "relative": self.relative}
+
+    def _state_to_json(self):
+        return {"trees": [t.to_json() for t in self.trees]}
+
+    def _state_from_json(self, d):
+        self.trees = [RegressionTree.from_json(t) for t in d["trees"]]
+
 
 def fit_rf_with_cv(x: np.ndarray, y: np.ndarray,
                    grid: Sequence[dict] = DEFAULT_GRID,

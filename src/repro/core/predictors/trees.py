@@ -108,6 +108,28 @@ class RegressionTree:
             return None
         return best
 
+    # -- serialization --------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "max_depth": self.max_depth,
+            "min_samples_split": self.min_samples_split,
+            "min_samples_leaf": self.min_samples_leaf,
+            "max_features": self.max_features,
+            "seed": self.seed,
+            "nodes": [[n.feature, n.threshold, n.left, n.right, n.value, n.is_leaf]
+                      for n in self.nodes],
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "RegressionTree":
+        t = cls(max_depth=d["max_depth"], min_samples_split=d["min_samples_split"],
+                min_samples_leaf=d["min_samples_leaf"],
+                max_features=d["max_features"], seed=d["seed"])
+        t.nodes = [_Node(feature=int(f), threshold=float(thr), left=int(l),
+                         right=int(r), value=float(v), is_leaf=bool(leaf))
+                   for f, thr, l, r, v, leaf in d["nodes"]]
+        return t
+
     # -- prediction -----------------------------------------------------------
     def predict(self, x: np.ndarray) -> np.ndarray:
         x = np.asarray(x, dtype=np.float64)

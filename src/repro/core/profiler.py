@@ -96,14 +96,26 @@ class ArchRecord:
 
 
 class ProfileSession:
-    """Shares compiled callables + per-signature latencies across graphs."""
+    """Shares compiled callables + per-signature latencies across graphs.
+
+    ``store`` (a `repro.pipeline.ProfileStore`, duck-typed so core stays
+    independent of the pipeline layer) makes the session read-through /
+    write-back persistent: op latencies and whole-graph records found in
+    the store are returned without touching the device, and every new
+    measurement is written back.  ``measured_ops`` counts actual timing
+    runs — on a warm store it stays at zero.
+    """
 
     def __init__(self, *, warmup: int = 1, inner: int = 4, repeats: int = 3,
-                 e2e_inner: int = 2, e2e_repeats: int = 3):
+                 e2e_inner: int = 2, e2e_repeats: int = 3,
+                 store: Optional[Any] = None):
         self.fn_cache: Dict[str, Callable] = {}
         self.latency_cache: Dict[str, float] = {}
         self.warmup, self.inner, self.repeats = warmup, inner, repeats
         self.e2e_inner, self.e2e_repeats = e2e_inner, e2e_repeats
+        self.store = store
+        self.measured_ops = 0
+        self.measured_graphs = 0
 
     # -- per-op ---------------------------------------------------------------
     def _op_inputs(self, graph: OpGraph, node: OpNode, dtype: str) -> List[Any]:
@@ -115,9 +127,15 @@ class ProfileSession:
         return arrs
 
     def measure_op(self, graph: OpGraph, node: OpNode, setting: DeviceSetting) -> float:
-        sig = setting.dtype + ":" + op_signature(graph, node)
+        base_sig = op_signature(graph, node)
+        sig = setting.dtype + ":" + base_sig
         if sig in self.latency_cache:
             return self.latency_cache[sig]
+        if self.store is not None:
+            rec = self.store.get_op(setting, base_sig)
+            if rec is not None:
+                self.latency_cache[sig] = rec.latency_s
+                return rec.latency_s
         if setting.dtype == "int8":
             from repro.quant.int8 import build_quant_op_fn as builder
         else:
@@ -135,10 +153,27 @@ class ProfileSession:
         inner = int(np.clip(np.ceil(1.5e-3 / max(est, 1e-7)), self.inner, 256))
         lat = time_callable(jfn, args, warmup=0, inner=inner, repeats=self.repeats)
         self.latency_cache[sig] = lat
+        self.measured_ops += 1
+        if self.store is not None:
+            names, vals = featurize(graph, node)
+            self.store.put_op(setting, OpRecord(
+                signature=base_sig, op_type=node.op_type,
+                feature_names=list(names),
+                features=[float(v) for v in vals],
+                latency_s=lat, fused=list(node.fused)))
         return lat
 
     # -- whole graph ------------------------------------------------------------
     def profile_graph(self, graph: OpGraph, setting: DeviceSetting) -> ArchRecord:
+        if self.store is not None:
+            cached = self.store.get_arch(setting, graph.fingerprint())
+            if cached is not None:
+                # Hydrate the in-process cache so sibling graphs sharing
+                # signatures also skip measurement.
+                for op in cached.ops:
+                    self.latency_cache.setdefault(
+                        setting.dtype + ":" + op.signature, op.latency_s)
+                return cached
         ex = GraphExecutor(graph, mode=setting.mode, dtype=setting.dtype,
                            fn_cache=self.fn_cache)
         g = ex.exec_graph
@@ -160,7 +195,7 @@ class ProfileSession:
         sync = not setting.is_gpu_like
         e2e = time_callable(lambda *a: ex(*a, sync_per_op=sync), inputs,
                             warmup=1, inner=self.e2e_inner, repeats=self.e2e_repeats)
-        return ArchRecord(
+        rec = ArchRecord(
             name=graph.name,
             e2e_s=e2e,
             op_sum_s=float(sum(o.latency_s for o in ops)),
@@ -168,6 +203,10 @@ class ProfileSession:
             num_kernels=len(g.nodes),
             ops=ops,
         )
+        self.measured_graphs += 1
+        if self.store is not None:
+            self.store.put_arch(setting, graph.fingerprint(), rec)
+        return rec
 
     def profile_suite(self, graphs: Sequence[OpGraph], setting: DeviceSetting,
                       progress_every: int = 10) -> List[ArchRecord]:

@@ -1,0 +1,13 @@
+"""Unified latency-prediction pipeline (see docs/PIPELINE.md).
+
+ProfileStore (persisted measurements) → PredictorHub (trained banks)
+→ LatencyService (cached, batched end-to-end prediction).
+"""
+from repro.pipeline.hub import FAMILIES, PredictorHub
+from repro.pipeline.service import LatencyService, PredictionReport
+from repro.pipeline.store import ProfileStore, op_axis, setting_key
+
+__all__ = [
+    "FAMILIES", "LatencyService", "PredictionReport", "PredictorHub",
+    "ProfileStore", "op_axis", "setting_key",
+]

@@ -1,0 +1,143 @@
+"""Predictor hub — trains, caches, and persists `PredictorBank`s.
+
+One bank per (device setting × predictor family).  Training reads arch
+records out of a `ProfileStore` (the persisted profiling pass) and runs
+the paper's §4.2 flow — per-op-type fits + T_overhead estimation —
+via `repro.core.dataset.fit_predictor_bank`.  Banks round-trip to JSON
+(every predictor family serializes bit-exactly), so a trained hub can
+be shipped to a serving process that never profiles.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from repro.core.composition import PredictorBank
+from repro.core.profiler import DeviceSetting
+from repro.pipeline.store import ProfileStore, setting_key
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.pipeline.hub")
+
+FAMILIES = ("lasso", "rf", "gbdt", "mlp")
+
+
+def _bank_filename(key: str, family: str) -> str:
+    return f"bank__{key.replace('/', '__')}__{family}.json"
+
+
+class PredictorHub:
+    """Registry of trained per-op-type predictor banks.
+
+    ``root`` (optional) is a directory where banks are saved as one JSON
+    file each; `load` restores every bank found there.
+    """
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = root
+        self.banks: Dict[Tuple[str, str], PredictorBank] = {}
+        # Bumped on every (re)train so caches keyed on hub output —
+        # LatencyService's report LRU — know to invalidate.
+        self.version = 0
+
+    # -- training ------------------------------------------------------------
+    def train(
+        self,
+        store: ProfileStore,
+        setting: DeviceSetting,
+        family: str = "gbdt",
+        *,
+        hparams: Optional[Dict[str, Any]] = None,
+        min_samples: int = 5,
+        seed: int = 0,
+        overhead_model: str = "affine",
+        fingerprints: Optional[Sequence[str]] = None,
+        save: bool = True,
+    ) -> PredictorBank:
+        """Fit one bank from the store's arch records for ``setting``.
+
+        ``fingerprints`` restricts training to those graphs (train/test
+        splits); default is everything profiled under the setting.
+        """
+        if family not in FAMILIES:
+            raise ValueError(f"unknown predictor family {family!r}; "
+                             f"known: {FAMILIES}")
+        from repro.core.dataset import LatencyDataset, fit_predictor_bank
+
+        archs = store.arch_records(setting, fingerprints=fingerprints)
+        if not archs:
+            raise ValueError(
+                f"store has no arch records for {setting_key(setting)} — "
+                f"profile graphs through a store-backed ProfileSession first")
+        ds = LatencyDataset(setting_key(setting), archs)
+        bank = fit_predictor_bank(ds, family, hparams=hparams,
+                                  min_samples=min_samples, seed=seed,
+                                  overhead_model=overhead_model)
+        key = (setting_key(setting), family)
+        self.banks[key] = bank
+        self.version += 1
+        log.info("trained %s bank for %s on %d archs (%d op types)",
+                 family, key[0], len(archs), len(bank.predictors))
+        if save and self.root:
+            self.save_bank(setting, family)
+        return bank
+
+    # -- lookup --------------------------------------------------------------
+    def get(self, setting: DeviceSetting, family: str = "gbdt"
+            ) -> Optional[PredictorBank]:
+        """Bank for (setting, family): memory first, then ``root`` on disk."""
+        key = (setting_key(setting), family)
+        bank = self.banks.get(key)
+        if bank is None and self.root:
+            path = os.path.join(self.root, _bank_filename(*key))
+            if os.path.exists(path):
+                with open(path) as f:
+                    bank = PredictorBank.from_json(json.load(f))
+                self.banks[key] = bank
+        return bank
+
+    # -- persistence ---------------------------------------------------------
+    def _write_bank(self, key: str, family: str, bank: PredictorBank) -> str:
+        os.makedirs(self.root, exist_ok=True)
+        path = os.path.join(self.root, _bank_filename(key, family))
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(bank.to_json(), f)
+        os.replace(tmp, path)
+        return path
+
+    def save_bank(self, setting: DeviceSetting, family: str) -> str:
+        if not self.root:
+            raise ValueError("PredictorHub has no root directory")
+        key = (setting_key(setting), family)
+        return self._write_bank(key[0], family, self.banks[key])
+
+    def save(self, root: Optional[str] = None) -> str:
+        """Write every in-memory bank under ``root`` (defaults to self.root)."""
+        if root:
+            self.root = root
+        if not self.root:
+            raise ValueError("PredictorHub has no root directory")
+        for (key, family), bank in self.banks.items():
+            self._write_bank(key, family, bank)
+        return self.root
+
+    @classmethod
+    def load(cls, root: str) -> "PredictorHub":
+        """Restore every ``bank__*.json`` under ``root``."""
+        hub = cls(root)
+        if os.path.isdir(root):
+            for fn in sorted(os.listdir(root)):
+                if not (fn.startswith("bank__") and fn.endswith(".json")):
+                    continue
+                # Re-derive the key from the filename: dtype__mode__family.
+                stem = fn[len("bank__"):-len(".json")]
+                parts = stem.split("__")
+                key, family = "/".join(parts[:-1]), parts[-1]
+                with open(os.path.join(root, fn)) as f:
+                    hub.banks[(key, family)] = PredictorBank.from_json(json.load(f))
+        return hub
+
+    def __len__(self) -> int:
+        return len(self.banks)

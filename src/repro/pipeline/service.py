@@ -1,0 +1,233 @@
+"""`LatencyService` — the single path from graphs to predicted latencies.
+
+    service = LatencyService.build(train_graphs, setting,
+                                   store="reports/profile_store.jsonl")
+    report = service.predict_e2e(graph, setting)   # PredictionReport
+
+Composes the paper's §4.2 formula through a trained `PredictorHub`
+bank, with two serving-oriented layers on top:
+
+  * a graph-fingerprint LRU cache — repeated queries for the same
+    architecture (NAS loops re-scoring candidates, serving admission
+    control) skip featurization and prediction entirely;
+  * batched multi-graph queries — `predict_batch` featurizes every
+    uncached graph, groups rows by op type, and calls each per-type
+    predictor once over the whole batch (vectorized for lasso/MLP,
+    single tree-walk loop for RF/GBDT) instead of once per op.
+
+GPU-like settings (``fused_groups``) are predicted on the fused graph,
+mirroring how they were profiled.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.composition import PredictorBank
+from repro.core.features import featurize
+from repro.core.fusion import fuse_graph
+from repro.core.ir import OpGraph
+from repro.core.profiler import DeviceSetting, ProfileSession
+from repro.pipeline.hub import PredictorHub
+from repro.pipeline.store import ProfileStore, setting_key
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.pipeline.service")
+
+
+@dataclass(frozen=True)
+class PredictionReport:
+    """One end-to-end prediction with its per-op breakdown."""
+
+    graph_name: str
+    fingerprint: str
+    setting: str                       # "dtype/mode" key
+    predictor: str                     # family the bank was trained with
+    e2e_s: float
+    per_op: Tuple[Tuple[str, float], ...]   # (op_type, seconds) per kernel
+    overhead_s: float
+    num_ops: int
+    num_kernels: int
+    from_cache: bool = False
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "graph": self.graph_name, "fp": self.fingerprint,
+            "setting": self.setting, "predictor": self.predictor,
+            "e2e_s": self.e2e_s, "overhead_s": self.overhead_s,
+            "num_ops": self.num_ops, "num_kernels": self.num_kernels,
+            "per_op": [list(p) for p in self.per_op],
+        }
+
+
+class LatencyService:
+    """Facade over ProfileStore → PredictorHub → composed prediction."""
+
+    def __init__(self, hub: PredictorHub, *,
+                 default_setting: Optional[DeviceSetting] = None,
+                 predictor: str = "gbdt", cache_size: int = 1024):
+        self.hub = hub
+        self.default_setting = default_setting
+        self.predictor = predictor
+        self.cache_size = int(cache_size)
+        self._cache: "OrderedDict[Tuple[str, str, str], PredictionReport]" = OrderedDict()
+        self._hub_version = hub.version
+        self.cache_hits = 0
+        self.cache_misses = 0
+        # Populated by `build`; optional otherwise.
+        self.store: Optional[ProfileStore] = None
+        self.session: Optional[ProfileSession] = None
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        graphs: Sequence[OpGraph],
+        setting: DeviceSetting,
+        *,
+        store: Union[ProfileStore, str, None] = None,
+        session: Optional[ProfileSession] = None,
+        predictor: str = "gbdt",
+        hparams: Optional[Dict[str, Any]] = None,
+        overhead_model: str = "affine",
+        train_graphs: Optional[Sequence[OpGraph]] = None,
+        hub_root: Optional[str] = None,
+        cache_size: int = 1024,
+    ) -> "LatencyService":
+        """Profile ``graphs`` through a store-backed session, train a bank,
+        and return a ready-to-serve service.
+
+        Profiling is incremental: signatures already in ``store`` are not
+        re-measured, so repeated builds (new scenarios, extra graphs)
+        only pay for what is new.  ``train_graphs`` (default: ``graphs``)
+        selects, by fingerprint, which profiled graphs the bank trains
+        on — pass a subset to hold out test architectures.
+        """
+        if session is not None and session.store is not None:
+            store = session.store    # the session's store is authoritative
+        elif isinstance(store, str):
+            store = ProfileStore(store)
+        elif store is None:
+            store = ProfileStore()
+        if session is None:
+            session = ProfileSession(store=store)
+        else:
+            session.store = store
+        session.profile_suite(graphs, setting)
+        hub = PredictorHub(hub_root)
+        fps = [g.fingerprint() for g in (train_graphs if train_graphs is not None
+                                         else graphs)]
+        hub.train(store, setting, predictor, hparams=hparams,
+                  overhead_model=overhead_model, fingerprints=fps)
+        svc = cls(hub, default_setting=setting, predictor=predictor,
+                  cache_size=cache_size)
+        svc.store = store
+        svc.session = session
+        return svc
+
+    # -- prediction ----------------------------------------------------------
+    def _resolve(self, setting: Optional[DeviceSetting]) -> DeviceSetting:
+        setting = setting or self.default_setting
+        if setting is None:
+            raise ValueError("no DeviceSetting given and no default set")
+        return setting
+
+    def _bank(self, setting: DeviceSetting, family: str) -> PredictorBank:
+        bank = self.hub.get(setting, family)
+        if bank is None:
+            raise KeyError(
+                f"no trained bank for ({setting_key(setting)}, {family}) — "
+                f"call PredictorHub.train or LatencyService.build first")
+        return bank
+
+    def predict_e2e(self, graph: OpGraph,
+                    setting: Optional[DeviceSetting] = None,
+                    predictor: Optional[str] = None) -> PredictionReport:
+        """Predicted end-to-end latency of one graph (LRU-cached)."""
+        return self.predict_batch([graph], setting, predictor)[0]
+
+    def predict_batch(self, graphs: Sequence[OpGraph],
+                      setting: Optional[DeviceSetting] = None,
+                      predictor: Optional[str] = None) -> List[PredictionReport]:
+        """Batched query: one predictor call per op type across all graphs."""
+        setting = self._resolve(setting)
+        family = predictor or self.predictor
+        skey = setting_key(setting)
+        if self._hub_version != self.hub.version:   # bank(s) retrained
+            self._cache.clear()
+            self._hub_version = self.hub.version
+
+        out: List[Optional[PredictionReport]] = [None] * len(graphs)
+        fresh: List[Tuple[int, str, OpGraph]] = []   # (position, fp, graph)
+        for i, g in enumerate(graphs):
+            fp = g.fingerprint()
+            ck = (fp, skey, family)
+            hit = self._cache.get(ck)
+            if hit is not None:
+                self._cache.move_to_end(ck)
+                self.cache_hits += 1
+                out[i] = replace(hit, from_cache=True)
+            else:
+                self.cache_misses += 1
+                fresh.append((i, fp, g))
+        if not fresh:
+            return out  # type: ignore[return-value]
+
+        bank = self._bank(setting, family)
+        # Fused-mode scenarios are profiled (and therefore predicted) on
+        # the fused graph — same rewrite GraphExecutor applies.
+        exec_graphs = []
+        for i, fp, g in fresh:
+            exec_graphs.append(fuse_graph(g)[1] if setting.is_gpu_like else g)
+
+        # Gather features grouped by op type across every fresh graph.
+        rows: Dict[str, List[np.ndarray]] = {}
+        slots: Dict[str, List[Tuple[int, int]]] = {}  # op_type → (fresh idx, node idx)
+        for j, g in enumerate(exec_graphs):
+            for k, node in enumerate(g.nodes):
+                _, x = featurize(g, node)
+                rows.setdefault(node.op_type, []).append(x)
+                slots.setdefault(node.op_type, []).append((j, k))
+
+        # One predictor call per op type; unseen types contribute 0
+        # (same fallback as PredictorBank.predict_op).
+        per_op: List[List[Optional[Tuple[str, float]]]] = [
+            [None] * len(g.nodes) for g in exec_graphs]
+        for op_type, xs in rows.items():
+            model = bank.predictors.get(op_type)
+            if model is None:
+                preds = np.zeros(len(xs))
+            else:
+                preds = model.predict(np.stack(xs))   # already clamped ≥ 0
+            for (j, k), p in zip(slots[op_type], preds):
+                per_op[j][k] = (op_type, float(p))
+
+        for (i, fp, g), eg, ops in zip(fresh, exec_graphs, per_op):
+            overhead = bank.overhead + bank.overhead_per_kernel * len(eg.nodes)
+            total = overhead + bank.op_sum_scale * sum(p for _, p in ops)
+            report = PredictionReport(
+                graph_name=g.name, fingerprint=fp, setting=skey,
+                predictor=family, e2e_s=float(total),
+                per_op=tuple(ops), overhead_s=float(overhead),
+                num_ops=g.num_ops(), num_kernels=len(eg.nodes),
+            )
+            self._insert((fp, skey, family), report)
+            out[i] = report
+        return out  # type: ignore[return-value]
+
+    # -- cache ---------------------------------------------------------------
+    def _insert(self, key: Tuple[str, str, str], report: PredictionReport) -> None:
+        self._cache[key] = report
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    def cache_info(self) -> Dict[str, int]:
+        return {"size": len(self._cache), "capacity": self.cache_size,
+                "hits": self.cache_hits, "misses": self.cache_misses}
+
+    def clear_cache(self) -> None:
+        self._cache.clear()

@@ -1,0 +1,194 @@
+"""Persistent profile store — the disk layer under `ProfileSession`.
+
+The paper's central cost is profiling: measuring every unique op config
+on-device is what makes latency datasets expensive (§4.3).  The store
+persists those measurements as JSON-lines so re-profiling across
+processes, runs, and scenarios is incremental: a warm store performs
+zero new measurements for already-profiled signatures.
+
+Two record kinds share one append-only ``.jsonl`` file:
+
+  {"kind": "op",   "axis": "<dtype>", "sig": ..., "type": ...,
+   "names": [...], "x": [...], "y": ..., "fused": [...]}
+  {"kind": "arch", "setting": "<dtype>/<mode>", "fp": "<fingerprint>",
+   "arch": {ArchRecord.to_json()}}
+
+One store file describes ONE physical device (the paper keeps per-phone
+datasets); keys capture the parts of a `DeviceSetting` that change what
+executes on it, not the setting's display name.  Op records are keyed by
+``op_signature × dtype`` ("axis"): executor mode changes *which* graph is
+executed (fusion rewrites nodes, which changes their signatures), not the
+latency of a given kernel, so float32 measurements are shared between
+op_by_op and fused_groups scenarios — the same sharing
+`ProfileSession.latency_cache` always did in-process.  Arch records
+(end-to-end latency) are keyed by ``dtype/mode``.  Do not point settings
+for two different physical devices at the same store file.
+
+Appends are flushed per record; on load, the last line for a key wins,
+so interrupted runs at worst lose the final record.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.profiler import ArchRecord, DeviceSetting, OpRecord
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.pipeline.store")
+
+
+def op_axis(setting: DeviceSetting) -> str:
+    """Projection of a DeviceSetting onto what per-op latency depends on."""
+    return setting.dtype
+
+
+def setting_key(setting: DeviceSetting) -> str:
+    """Canonical key for end-to-end scenarios (dtype × executor mode).
+
+    Deliberately excludes ``setting.name`` — on one physical device the
+    label doesn't change what runs.  A store file is per-device.
+    """
+    return f"{setting.dtype}/{setting.mode}"
+
+
+class ProfileStore:
+    """Measurement cache keyed by ``op_signature × DeviceSetting``.
+
+    ``path=None`` gives a purely in-memory store (same API, no
+    persistence) — useful for tests and one-shot scripts.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._ops: Dict[Tuple[str, str], OpRecord] = {}     # (axis, sig) → rec
+        self._archs: Dict[Tuple[str, str], ArchRecord] = {}  # (setting, fp) → rec
+        self.hits = 0
+        self.misses = 0
+        self._fh = None
+        if path and os.path.exists(path):
+            self._load(path)
+
+    # -- persistence ---------------------------------------------------------
+    def _load(self, path: str) -> None:
+        n_bad = 0
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    d = json.loads(line)
+                    if d["kind"] == "op":
+                        rec = OpRecord(d["sig"], d["type"], d["names"], d["x"],
+                                       d["y"], d.get("fused", []))
+                        self._ops[(d["axis"], d["sig"])] = rec
+                    elif d["kind"] == "arch":
+                        self._archs[(d["setting"], d["fp"])] = \
+                            ArchRecord.from_json(d["arch"])
+                except (KeyError, ValueError, TypeError):
+                    n_bad += 1
+        if n_bad:
+            log.warning("%s: skipped %d malformed lines", path, n_bad)
+        log.info("loaded store %s: %d op records, %d arch records",
+                 path, len(self._ops), len(self._archs))
+
+    def _append(self, d: Dict[str, Any]) -> None:
+        if not self.path:
+            return
+        if self._fh is None:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            self._fh = open(self.path, "a")
+        self._fh.write(json.dumps(d) + "\n")
+        self._fh.flush()
+
+    def flush(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "ProfileStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- op records ----------------------------------------------------------
+    def get_op(self, setting: DeviceSetting, signature: str) -> Optional[OpRecord]:
+        rec = self._ops.get((op_axis(setting), signature))
+        if rec is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return rec
+
+    def put_op(self, setting: DeviceSetting, rec: OpRecord) -> None:
+        key = (op_axis(setting), rec.signature)
+        if key in self._ops:
+            return
+        self._ops[key] = rec
+        self._append({"kind": "op", "axis": key[0], **rec.to_json()})
+
+    # -- arch records --------------------------------------------------------
+    def get_arch(self, setting: DeviceSetting, fingerprint: str) -> Optional[ArchRecord]:
+        rec = self._archs.get((setting_key(setting), fingerprint))
+        if rec is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return rec
+
+    def put_arch(self, setting: DeviceSetting, fingerprint: str,
+                 rec: ArchRecord) -> None:
+        key = (setting_key(setting), fingerprint)
+        if key in self._archs:
+            return
+        self._archs[key] = rec
+        self._append({"kind": "arch", "setting": key[0], "fp": fingerprint,
+                      "arch": rec.to_json()})
+
+    # -- training views ------------------------------------------------------
+    def arch_records(self, setting: DeviceSetting,
+                     fingerprints: Optional[Sequence[str]] = None
+                     ) -> List[ArchRecord]:
+        """Arch records for one scenario, optionally restricted to the given
+        graph fingerprints (graph *names* are not unique across configs in a
+        persistent store — e.g. `nas_0` exists at every resolution)."""
+        sk = setting_key(setting)
+        items = sorted(self._archs.items(), key=lambda kv: kv[0])
+        if fingerprints is None:
+            return [r for (k, _), r in items if k == sk]
+        wanted = set(fingerprints)
+        return [r for (k, fp), r in items if k == sk and fp in wanted]
+
+    def op_table(self, setting: DeviceSetting, op_type: str
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """(X, y) of every stored op of one type on this setting's axis."""
+        axis = op_axis(setting)
+        xs, ys = [], []
+        for (a, _), rec in sorted(self._ops.items(), key=lambda kv: kv[0]):
+            if a == axis and rec.op_type == op_type:
+                xs.append(rec.features)
+                ys.append(rec.latency_s)
+        if not xs:
+            return np.zeros((0, 0)), np.zeros((0,))
+        return np.asarray(xs, dtype=np.float64), np.asarray(ys, dtype=np.float64)
+
+    def op_types(self, setting: DeviceSetting) -> List[str]:
+        axis = op_axis(setting)
+        return sorted({r.op_type for (a, _), r in self._ops.items() if a == axis})
+
+    # -- stats ---------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._ops)
+
+    def stats(self) -> Dict[str, int]:
+        return {"op_records": len(self._ops), "arch_records": len(self._archs),
+                "hits": self.hits, "misses": self.misses}

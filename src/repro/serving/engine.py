@@ -6,6 +6,14 @@ Prefill runs the model forward on the prompt and seeds the cache by
 replaying tokens through `decode_step` (correct for every family,
 incl. SSM state caches); the fused one-shot prefill-into-cache path is
 a TPU optimization tracked in EXPERIMENTS §Perf.
+
+When constructed with a `repro.pipeline.LatencyService` and the op
+graph of one decode step, the engine predicts its per-step latency up
+front (`LatencyService.predict_e2e`) and exposes per-request completion
+estimates — the paper's NAS-time use case transplanted to serving-time
+admission control (predict, don't measure).  `stats()` reports the
+predicted-vs-measured step latency so the prediction quality is
+observable in production.
 """
 from __future__ import annotations
 
@@ -33,7 +41,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
-                 max_len: int = 512, greedy: bool = True, extras=None):
+                 max_len: int = 512, greedy: bool = True, extras=None,
+                 latency_service=None, step_graph=None, latency_setting=None):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -45,6 +54,33 @@ class ServeEngine:
         self.queue: List[Request] = []
         self._step = jax.jit(model.decode_step)
         self._uid = 0
+        self._steps = 0
+        self._step_time_s = 0.0
+        # Optional latency prediction: an OpGraph of one decode step plus
+        # a trained LatencyService give an a-priori per-step estimate.
+        self.step_report = None
+        self.predicted_step_s: Optional[float] = None
+        if latency_service is not None and step_graph is not None:
+            self.step_report = latency_service.predict_e2e(
+                step_graph, latency_setting)
+            self.predicted_step_s = self.step_report.e2e_s
+            log.info("predicted decode-step latency: %.3f ms (%d kernels)",
+                     1e3 * self.predicted_step_s, self.step_report.num_kernels)
+
+    def estimate_request_s(self, prompt_len: int, max_new_tokens: int
+                           ) -> Optional[float]:
+        """Predicted wall-clock for one request (prefill replay + decode)."""
+        if self.predicted_step_s is None:
+            return None
+        return self.predicted_step_s * (max(prompt_len - 1, 0) + max_new_tokens)
+
+    def stats(self) -> Dict[str, Any]:
+        measured = self._step_time_s / self._steps if self._steps else None
+        return {
+            "steps": self._steps,
+            "measured_step_s": measured,
+            "predicted_step_s": self.predicted_step_s,
+        }
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
         self._uid += 1
@@ -88,8 +124,11 @@ class ServeEngine:
         self._admit()
         if not any(self.active):
             return 0
+        t0 = time.perf_counter()
         logits, self.cache = self._step(self.params, self._batch_all(), self.cache)
         logits = np.asarray(logits)
+        self._steps += 1
+        self._step_time_s += time.perf_counter() - t0
         finished = 0
         for slot, req in enumerate(self.active):
             if req is None:

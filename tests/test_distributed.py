@@ -13,6 +13,15 @@ import pytest
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+# The sharding/pipeline stack targets the jax>=0.6 mesh APIs
+# (jax.set_mesh, jax.shard_map, AxisType); on older jax the subprocess
+# tests cannot run — skip them rather than fail the tier-1 suite.
+import jax  # noqa: E402
+
+requires_new_sharding = pytest.mark.skipif(
+    not (hasattr(jax, "set_mesh") and hasattr(jax, "shard_map")),
+    reason="needs jax>=0.6 sharding APIs (jax.set_mesh / jax.shard_map)")
+
 
 def run_subprocess(body: str, timeout: int = 420) -> str:
     code = textwrap.dedent("""
@@ -31,6 +40,7 @@ def run_subprocess(body: str, timeout: int = 420) -> str:
     return proc.stdout
 
 
+@requires_new_sharding
 def test_sharded_train_step_matches_single_device():
     out = run_subprocess("""
         import dataclasses
@@ -60,6 +70,7 @@ def test_sharded_train_step_matches_single_device():
     assert "LOSS_MATCH" in out
 
 
+@requires_new_sharding
 def test_fsdp_gather_numerics_match_tp():
     out = run_subprocess("""
         import dataclasses
@@ -85,6 +96,7 @@ def test_fsdp_gather_numerics_match_tp():
     assert "FSDP_MATCH" in out
 
 
+@requires_new_sharding
 def test_pipeline_parallel_matches_sequential():
     out = run_subprocess("""
         from functools import partial
@@ -118,6 +130,7 @@ def test_pipeline_parallel_matches_sequential():
     assert "PIPELINE_MATCH" in out
 
 
+@requires_new_sharding
 def test_compressed_psum_under_shard_map():
     out = run_subprocess("""
         from jax.sharding import PartitionSpec as P
@@ -151,6 +164,7 @@ def test_elastic_mesh_shapes():
     assert int(np.prod(shape)) == 24
 
 
+@requires_new_sharding
 def test_elastic_recovery_roundtrip(tmp_path):
     out = run_subprocess(f"""
         from repro.checkpoint import CheckpointManager
@@ -177,6 +191,7 @@ def test_elastic_recovery_roundtrip(tmp_path):
     assert "ELASTIC_OK" in out
 
 
+@requires_new_sharding
 def test_dryrun_reduced_cell_on_8_devices():
     """End-to-end mini dry-run: reduced arch on a small mesh, full record."""
     out = run_subprocess("""

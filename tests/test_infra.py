@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep — see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager

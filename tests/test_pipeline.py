@@ -1,0 +1,313 @@
+"""Pipeline-layer tests: predictor/bank serialization round-trips,
+ProfileStore warm-cache semantics, LatencyService fingerprint LRU,
+OpGraph adjacency index, and the MAPE-guard regression.
+
+These run without optional deps (no hypothesis) so the predictor
+families stay covered even where tests/test_predictors.py is skipped.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.composition import PredictorBank, mape
+from repro.core.ir import OpGraph
+from repro.core.predictors import load_predictor, make_predictor
+from repro.core.profiler import DeviceSetting, ProfileSession
+from repro.pipeline import LatencyService, PredictorHub, ProfileStore
+
+SETTING = DeviceSetting("cpu_f32", "float32", "op_by_op")
+
+FAST_KW = {
+    "lasso": {},
+    "rf": {"n_trees": 4},
+    "gbdt": {"n_stages": 25},
+    "mlp": {"max_epochs": 50},
+}
+
+
+def roofline_data(n=80, d=5, seed=0):
+    """Synthetic roofline labels: max(flops/peak, bytes/bw) + dispatch."""
+    rng = np.random.default_rng(seed)
+    x = np.abs(rng.standard_normal((n, d))) * np.array([1e9, 1e6, 64, 64, 3])
+    flops, nbytes = x[:, 0], x[:, 1]
+    y = np.maximum(flops / 50e9, nbytes / 10e9) + 5e-6
+    return x, y
+
+
+def tiny_graph(name="t", ch=4):
+    g = OpGraph(name)
+    x0 = g.add_input((1, 4, 4, ch))
+    (c1,) = g.add_op("conv2d", [x0], [(1, 4, 4, ch)],
+                     {"kernel_h": 3, "kernel_w": 3, "stride": 1, "groups": 1})
+    (e1,) = g.add_op("elementwise", [c1], [(1, 4, 4, ch)], {"ew_kind": "add"})
+    (m1,) = g.add_op("mean", [e1], [(1, ch)])
+    g.mark_output(m1)
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Predictor serialization (satellite: save/load round-trip per family)
+# ---------------------------------------------------------------------------
+
+class TestPredictorRoundTrip:
+    @pytest.mark.parametrize("family", ["lasso", "rf", "gbdt", "mlp"])
+    def test_roundtrip_identical_predictions(self, family):
+        x, y = roofline_data()
+        m = make_predictor(family, **FAST_KW[family]).fit(x, y)
+        blob = json.dumps(m.to_json())          # through actual JSON text
+        m2 = load_predictor(json.loads(blob))
+        assert np.array_equal(m.predict(x), m2.predict(x))
+
+    def test_bank_roundtrip(self):
+        x, y = roofline_data()
+        bank = PredictorBank(setting="cpu_f32", overhead=1e-4,
+                             overhead_per_kernel=2e-6, op_sum_scale=1.1)
+        bank.predictors["conv2d"] = make_predictor("gbdt", n_stages=25).fit(x, y)
+        bank.predictors["mean"] = make_predictor("lasso").fit(x, y)
+        bank2 = PredictorBank.from_json(json.loads(json.dumps(bank.to_json())))
+        assert bank2.setting == bank.setting
+        assert bank2.overhead == bank.overhead
+        assert bank2.overhead_per_kernel == bank.overhead_per_kernel
+        assert bank2.op_sum_scale == bank.op_sum_scale
+        for t in bank.predictors:
+            assert np.array_equal(bank.predictors[t].predict(x),
+                                  bank2.predictors[t].predict(x))
+
+
+# ---------------------------------------------------------------------------
+# MAPE guard (satellite regression)
+# ---------------------------------------------------------------------------
+
+class TestMapeGuard:
+    def test_zero_and_tiny_negative_labels_bounded(self):
+        x, y = roofline_data(n=20)
+        m = make_predictor("lasso").fit(x, y)
+        bad_y = np.array([0.0, -1e-300, 1e-300] + [1.0] * 17)
+        v = m.mape(x, bad_y)
+        assert np.isfinite(v)
+        # Each clamped term is bounded by |pred - y| / 1e-12.
+        bound = np.max(np.abs(m.predict(x) - bad_y)) / 1e-12
+        assert v <= bound
+
+    def test_composition_mape_clamped(self):
+        # Old np.where(y == 0, ...) guard let -1e-300 divide unprotected
+        # (→ ~1e300); the clamp bounds it to |diff| / 1e-12.
+        v = mape([-1e-300], [1.0])
+        assert np.isfinite(v) and v <= 1.0 / 1e-12
+        assert mape([2.0], [2.0]) == 0.0
+        assert mape([4.0], [2.0]) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# OpGraph adjacency index (satellite: O(1) consumers/producer)
+# ---------------------------------------------------------------------------
+
+class TestAdjacencyIndex:
+    def test_matches_linear_scan(self):
+        g = tiny_graph()
+        for tid in g.tensors:
+            assert g.consumers(tid) == [n for n in g.nodes if tid in n.inputs]
+            assert g.producer(tid) == next(
+                (n for n in g.nodes if tid in n.outputs), None)
+
+    def test_invalidated_on_add_op(self):
+        g = tiny_graph()
+        out = g.output_ids[0]
+        assert g.consumers(out) == []          # builds the index
+        (e2,) = g.add_op("elementwise", [out], [(1, 4)], {"ew_kind": "neg"})
+        assert [n.op_id for n in g.consumers(out)] == [g.nodes[-1].op_id]
+        assert g.producer(e2) is g.nodes[-1]
+
+    def test_duplicate_input_listed_once(self):
+        g = OpGraph("dup")
+        x0 = g.add_input((1, 4, 4, 4))
+        g.add_op("elementwise", [x0, x0], [(1, 4, 4, 4)], {"ew_kind": "mul"})
+        assert len(g.consumers(x0)) == 1
+
+
+# ---------------------------------------------------------------------------
+# ProfileStore (tentpole: persistent read-through/write-back cache)
+# ---------------------------------------------------------------------------
+
+class TestProfileStore:
+    def fast_session(self, **kw):
+        return ProfileSession(warmup=0, inner=1, repeats=1,
+                              e2e_inner=1, e2e_repeats=1, **kw)
+
+    def test_warm_store_measures_nothing(self, tmp_path):
+        path = str(tmp_path / "store.jsonl")
+        g = tiny_graph()
+        s1 = self.fast_session(store=ProfileStore(path))
+        rec1 = s1.profile_graph(g, SETTING)
+        assert s1.measured_ops == 3 and s1.measured_graphs == 1
+
+        # Fresh process-equivalent: new session, store reloaded from disk.
+        s2 = self.fast_session(store=ProfileStore(path))
+        rec2 = s2.profile_graph(g, SETTING)
+        assert s2.measured_ops == 0 and s2.measured_graphs == 0
+        assert rec2.e2e_s == rec1.e2e_s
+        assert [o.latency_s for o in rec2.ops] == [o.latency_s for o in rec1.ops]
+
+    def test_shared_signatures_skip_measurement(self, tmp_path):
+        path = str(tmp_path / "store.jsonl")
+        s1 = self.fast_session(store=ProfileStore(path))
+        s1.profile_graph(tiny_graph("a"), SETTING)
+        n = s1.measured_ops
+        # A *different* graph with identical op configs: warm store, new
+        # session → zero new measurements (per-signature reuse).
+        s2 = self.fast_session(store=ProfileStore(path))
+        s2.profile_graph(tiny_graph("b"), SETTING)
+        assert n == 3 and s2.measured_ops == 0
+
+    def test_op_axis_shared_across_modes(self, tmp_path):
+        store = ProfileStore(str(tmp_path / "store.jsonl"))
+        s = self.fast_session(store=store)
+        s.profile_graph(tiny_graph(), SETTING)
+        gpu = DeviceSetting("gpu_f32", "float32", "fused_groups")
+        # Same dtype → op measurements shared between executor modes
+        # (the fused graph here differs only in node signatures it needs).
+        assert store.get_op(gpu, store.arch_records(SETTING)[0].ops[0].signature)
+
+    def test_in_memory_store_api(self):
+        store = ProfileStore()          # no path: same API, no persistence
+        s = self.fast_session(store=store)
+        s.profile_graph(tiny_graph(), SETTING)
+        assert len(store) == 3
+        x, y = store.op_table(SETTING, "conv2d")
+        assert x.shape[0] == 1 and y.shape == (1,)
+        assert store.op_types(SETTING) == ["conv2d", "elementwise", "mean"]
+
+
+# ---------------------------------------------------------------------------
+# PredictorHub + LatencyService (tentpole)
+# ---------------------------------------------------------------------------
+
+def _profiled_store(tmp_path, n=6):
+    """A store with n size-varied graphs profiled under SETTING."""
+    store = ProfileStore(str(tmp_path / "store.jsonl"))
+    session = ProfileSession(warmup=0, inner=1, repeats=1,
+                             e2e_inner=1, e2e_repeats=1, store=store)
+    graphs = [tiny_graph(f"g{i}", ch=4 * (i + 1)) for i in range(n)]
+    for g in graphs:
+        session.profile_graph(g, SETTING)
+    return store, session, graphs
+
+
+class TestHubAndService:
+    def test_train_save_load_roundtrip(self, tmp_path):
+        store, _, graphs = _profiled_store(tmp_path)
+        hub = PredictorHub(str(tmp_path / "hub"))
+        bank = hub.train(store, SETTING, "gbdt", hparams={"n_stages": 20},
+                         min_samples=2)
+        hub2 = PredictorHub.load(str(tmp_path / "hub"))
+        bank2 = hub2.get(SETTING, "gbdt")
+        assert bank2 is not None
+        g = graphs[0]
+        assert bank2.predict_graph(g) == bank.predict_graph(g)
+
+    def test_predict_e2e_cache_and_batch(self, tmp_path):
+        store, session, graphs = _profiled_store(tmp_path)
+        svc = LatencyService.build(graphs, SETTING, session=session,
+                                   predictor="gbdt",
+                                   hparams={"n_stages": 20})
+        # The build re-used the session: nothing was measured twice.
+        r1 = svc.predict_e2e(graphs[0])
+        assert not r1.from_cache and r1.e2e_s > 0
+        assert r1.num_ops == 3 and len(r1.per_op) == 3
+        r2 = svc.predict_e2e(graphs[0])
+        assert r2.from_cache and r2.e2e_s == r1.e2e_s
+        assert svc.cache_info()["hits"] == 1
+
+        svc.clear_cache()
+        batch = svc.predict_batch(graphs)
+        singles = [svc.predict_e2e(g) for g in graphs]
+        for b, s in zip(batch, singles):
+            assert s.from_cache            # batch populated the LRU
+            assert b.e2e_s == s.e2e_s
+
+    def test_retrain_invalidates_cache(self, tmp_path):
+        store, session, graphs = _profiled_store(tmp_path)
+        svc = LatencyService.build(graphs, SETTING, session=session,
+                                   predictor="gbdt",
+                                   hparams={"n_stages": 20})
+        svc.predict_e2e(graphs[0])
+        assert svc.predict_e2e(graphs[0]).from_cache
+        # Retrain with different hparams → next query must not serve the
+        # stale bank's cached report.
+        svc.hub.train(store, SETTING, "gbdt", hparams={"n_stages": 5},
+                      min_samples=2)
+        r = svc.predict_e2e(graphs[0])
+        assert not r.from_cache
+
+    def test_lru_eviction(self, tmp_path):
+        store, session, graphs = _profiled_store(tmp_path)
+        svc = LatencyService.build(graphs, SETTING, session=session,
+                                   predictor="lasso", cache_size=2)
+        for g in graphs[:3]:
+            svc.predict_e2e(g)
+        assert svc.cache_info()["size"] == 2
+        assert not svc.predict_e2e(graphs[0]).from_cache   # evicted
+
+    def test_report_json(self, tmp_path):
+        store, session, graphs = _profiled_store(tmp_path)
+        svc = LatencyService.build(graphs, SETTING, session=session,
+                                   predictor="lasso")
+        d = svc.predict_e2e(graphs[0]).to_json()
+        json.dumps(d)                      # serializable
+        assert d["setting"] == "float32/op_by_op"
+        assert len(d["per_op"]) == d["num_kernels"] == 3
+
+    def test_missing_bank_raises(self, tmp_path):
+        store, session, graphs = _profiled_store(tmp_path)
+        svc = LatencyService.build(graphs, SETTING, session=session,
+                                   predictor="lasso")
+        with pytest.raises(KeyError):
+            svc.predict_e2e(graphs[0],
+                            DeviceSetting("cpu_int8", "int8", "op_by_op"))
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine wiring (predicted step latency)
+# ---------------------------------------------------------------------------
+
+class _StubModel:
+    """Minimal decode-capable model for engine wiring tests."""
+
+    def init_cache(self, slots, max_len):
+        return {"pos": 0}
+
+    def decode_step(self, params, batch, cache):
+        tok = batch["token"]
+        import jax.numpy as jnp
+        logits = jnp.tile(jnp.arange(8.0), (tok.shape[0], 1)) + tok
+        return logits, {"pos": cache["pos"] + 1}
+
+
+class TestServeEngineWiring:
+    def test_predicted_step_latency(self, tmp_path):
+        from repro.serving import ServeEngine
+
+        store, session, graphs = _profiled_store(tmp_path)
+        svc = LatencyService.build(graphs, SETTING, session=session,
+                                   predictor="lasso")
+        eng = ServeEngine(_StubModel(), params={}, batch_slots=2, max_len=16,
+                          latency_service=svc, step_graph=graphs[0],
+                          latency_setting=SETTING)
+        assert eng.predicted_step_s is not None and eng.predicted_step_s > 0
+        assert eng.estimate_request_s(4, 8) == pytest.approx(
+            eng.predicted_step_s * 11)
+        eng.submit(np.array([1, 2, 3]), max_new_tokens=2)
+        done = eng.run(max_steps=10)
+        assert len(done) == 1
+        stats = eng.stats()
+        assert stats["steps"] > 0 and stats["measured_step_s"] > 0
+        assert stats["predicted_step_s"] == eng.predicted_step_s
+
+    def test_engine_without_service_unchanged(self):
+        from repro.serving import ServeEngine
+
+        eng = ServeEngine(_StubModel(), params={}, batch_slots=2, max_len=16)
+        assert eng.predicted_step_s is None
+        assert eng.estimate_request_s(4, 8) is None

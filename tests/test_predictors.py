@@ -1,6 +1,8 @@
 """Predictor family tests + hypothesis property tests on invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep — see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.predictors import (
