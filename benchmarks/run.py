@@ -18,6 +18,7 @@ BENCHES = [
     # ProfileStore → PredictorHub → LatencyService.predict_e2e path and
     # the OpGraph adjacency-index microbenchmark.
     ("pipeline", "benchmarks.bench_pipeline"),                # docs/PIPELINE.md
+    ("predict", "benchmarks.bench_predict"),                  # docs/PIPELINE.md
     ("graph_index", "benchmarks.bench_graph_index"),          # docs/PIPELINE.md
     ("multicore", "benchmarks.bench_multicore"),              # Fig. 2/3
     ("quantization", "benchmarks.bench_quantization"),        # Fig. 4/5

@@ -14,7 +14,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.features import featurize
+from repro.core.features import featurize, graph_features
 from repro.core.fusion import fuse_graph
 from repro.core.ir import OpGraph
 from repro.core.predictors.base import Predictor
@@ -51,15 +51,34 @@ class PredictorBank:
         if fused:
             _, g = fuse_graph(graph)
         total = self.overhead + self.overhead_per_kernel * len(g.nodes)
-        for node in g.nodes:
-            total += self.op_sum_scale * self.predict_op(g, node)
+        for _, p in self._predict_node_values(g):
+            total += self.op_sum_scale * p
         return total
 
     def predict_ops(self, graph: OpGraph, *, fused: bool = False) -> List[Tuple[str, float]]:
         g = graph
         if fused:
             _, g = fuse_graph(graph)
-        return [(n.op_type, self.predict_op(g, n)) for n in g.nodes]
+        return self._predict_node_values(g)
+
+    def _predict_node_values(self, g: OpGraph) -> List[Tuple[str, float]]:
+        """(op_type, predicted seconds) per node — one predictor call per
+        op type over the graph's cached feature matrices (fast path)."""
+        gf = graph_features(g)
+        vals = np.zeros(len(g.nodes))
+        for op_type, x in gf.matrix.items():
+            model = self.predictors.get(op_type)
+            if model is None:
+                continue      # unseen type → 0, same fallback as predict_op
+            vals[gf.index[op_type]] = model.predict(x)
+        return [(n.op_type, float(v)) for n, v in zip(g.nodes, vals)]
+
+    def warm(self) -> "PredictorBank":
+        """Eagerly build compiled inference state (flattened ensembles)
+        so the first serving query doesn't pay one-time setup cost."""
+        for p in self.predictors.values():
+            p.finalize()
+        return self
 
     # -- serialization --------------------------------------------------------
     def to_json(self) -> Dict:
@@ -79,7 +98,7 @@ class PredictorBank:
                    overhead_per_kernel=float(d["overhead_per_kernel"]),
                    op_sum_scale=float(d["op_sum_scale"]))
         bank.predictors = {t: load_predictor(p) for t, p in d["predictors"].items()}
-        return bank
+        return bank.warm()
 
 
 def estimate_overhead(e2e_measured: Sequence[float],

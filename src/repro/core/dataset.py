@@ -31,6 +31,10 @@ class LatencyDataset:
 
     setting: str
     archs: List[ArchRecord] = field(default_factory=list)
+    # Cached one-pass (X, y) assembly keyed on (n archs, subset); see
+    # `op_tables` — cleared implicitly when `archs` grows.
+    _tables: Dict[Any, Dict[str, Tuple[np.ndarray, np.ndarray]]] = \
+        field(default_factory=dict, repr=False, compare=False)
 
     # -- serialization --------------------------------------------------------
     def to_json(self) -> Dict[str, Any]:
@@ -53,20 +57,42 @@ class LatencyDataset:
             return cls.from_json(json.load(f))
 
     # -- views -----------------------------------------------------------------
+    def op_tables(self, arch_subset: Optional[Sequence[int]] = None
+                  ) -> Dict[str, Tuple[np.ndarray, np.ndarray]]:
+        """(X, y) per op type over (a subset of) architectures — one pass.
+
+        Training a bank used to call `op_table` once per op type, each
+        rescanning every op of every arch (O(types × ops)); this
+        assembles all type matrices in a single O(ops) sweep and caches
+        the result, so retrains and multi-family training reuse it.
+        """
+        key = (len(self.archs),
+               None if arch_subset is None else tuple(arch_subset))
+        cached = self._tables.get(key)
+        if cached is not None:
+            return cached
+        xs: Dict[str, list] = {}
+        ys: Dict[str, list] = {}
+        idxs = range(len(self.archs)) if arch_subset is None else arch_subset
+        for i in idxs:
+            for op in self.archs[i].ops:
+                xs.setdefault(op.op_type, []).append(op.features)
+                ys.setdefault(op.op_type, []).append(op.latency_s)
+        tables = {t: (np.asarray(xs[t], dtype=np.float64),
+                      np.asarray(ys[t], dtype=np.float64))
+                  for t in xs}
+        self._tables.clear()        # keep at most the latest assembly
+        self._tables[key] = tables
+        return tables
+
     def op_table(self, op_type: str,
                  arch_subset: Optional[Sequence[int]] = None
                  ) -> Tuple[np.ndarray, np.ndarray]:
         """(X, y) of all ops of one type across (a subset of) architectures."""
-        xs, ys = [], []
-        idxs = range(len(self.archs)) if arch_subset is None else arch_subset
-        for i in idxs:
-            for op in self.archs[i].ops:
-                if op.op_type == op_type:
-                    xs.append(op.features)
-                    ys.append(op.latency_s)
-        if not xs:
+        table = self.op_tables(arch_subset).get(op_type)
+        if table is None:
             return np.zeros((0, 0)), np.zeros((0,))
-        return np.asarray(xs, dtype=np.float64), np.asarray(ys, dtype=np.float64)
+        return table
 
     def op_types(self) -> List[str]:
         types = set()
@@ -151,8 +177,7 @@ def fit_predictor_bank(
     hp = dict(FAST_HPARAMS.get(predictor, {}))
     hp.update(hparams or {})
     bank = PredictorBank(setting=ds.setting)
-    for op_type in ds.op_types():
-        x, y = ds.op_table(op_type, train_idx)
+    for op_type, (x, y) in sorted(ds.op_tables(train_idx).items()):
         if len(y) < min_samples or x.shape[1] == 0:
             continue
         model: Predictor = PREDICTORS.get(predictor)(seed=seed, **hp)
@@ -180,7 +205,7 @@ def fit_predictor_bank(
             estimate_affine(e2e, sums, ks)
     else:
         bank.overhead = estimate_overhead(e2e, sums)
-    return bank
+    return bank.warm()
 
 
 def evaluate_bank(

@@ -24,6 +24,7 @@ from typing import Callable, Dict, List, Tuple
 import numpy as np
 
 from repro.core.ir import OpGraph, OpNode
+from repro.utils.lru import LRUCache
 
 FeatureFn = Callable[[OpGraph, OpNode], Tuple[List[str], List[float]]]
 
@@ -48,9 +49,16 @@ def featurize(graph: OpGraph, node: OpNode) -> Tuple[List[str], np.ndarray]:
 
 
 def feature_names(op_type: str) -> List[str]:
-    """Feature names for an op type (probe with a dummy — featurizers are pure)."""
-    # Names are static per featurizer; derive them lazily via a cached probe.
-    return _NAME_CACHE[op_type]
+    """Feature names for an op type (probe with a dummy — featurizers are pure).
+
+    Names are static per featurizer, so they are derived lazily: the
+    first access for an op type runs its featurizer on a dummy probe
+    node.  (Indexing `_NAME_CACHE` directly raised `KeyError` for any
+    type that had never been featurized in-process.)
+    """
+    if op_type not in _NAME_CACHE:
+        _probe_names(op_type)
+    return list(_NAME_CACHE[op_type])
 
 
 _NAME_CACHE: Dict[str, List[str]] = {}
@@ -59,6 +67,23 @@ _NAME_CACHE: Dict[str, List[str]] = {}
 def _cache_names(op_type: str, names: List[str]) -> None:
     if op_type not in _NAME_CACHE:
         _NAME_CACHE[op_type] = list(names)
+
+
+def _probe_names(op_type: str) -> None:
+    """Run ``op_type``'s featurizer on a dummy node to populate the cache.
+
+    Every featurizer only reads input/output tensor shapes and node
+    params (all of which have defaults), so a generic one-in/one-out
+    NHWC probe covers the whole registry.
+    """
+    fn = _FEATURIZERS.get(op_type)
+    if fn is None:
+        raise KeyError(f"no featurizer for op type {op_type!r}")
+    g = OpGraph(f"__probe_{op_type}")
+    tin = g.add_tensor((1, 8, 8, 4))
+    tout = g.add_tensor((1, 8, 8, 4))
+    node = OpNode(op_id=0, op_type=op_type, inputs=(tin,), outputs=(tout,))
+    fn(g, node)    # registered wrappers call _cache_names themselves
 
 
 # ---------------------------------------------------------------------------
@@ -433,3 +458,88 @@ def _f_collective(graph, node):
     names = ["bytes", "participants"]
     _cache_names("collective", names)
     return names, [nbytes, participants]
+
+
+# ---------------------------------------------------------------------------
+# Whole-graph feature matrices (the prediction fast path's feature cache)
+# ---------------------------------------------------------------------------
+
+class GraphFeatures:
+    """Every op of one graph featurized once, grouped by op type.
+
+    ``matrix[op_type]`` is the (count, dim) float64 feature matrix for
+    all nodes of that type (rows in node order); ``index[op_type]``
+    holds their node indices, and ``slots[k] = (op_type, row)`` maps a
+    node index back to its matrix row.  Per-type predictors consume the
+    matrices directly — no per-node re-featurization anywhere on the
+    query, training-assembly, or profiling paths.
+    """
+
+    __slots__ = ("fingerprint", "num_nodes", "matrix", "names", "index", "slots")
+
+    def __init__(self, fingerprint: str, num_nodes: int,
+                 matrix: Dict[str, np.ndarray], names: Dict[str, List[str]],
+                 index: Dict[str, np.ndarray],
+                 slots: List[Tuple[str, int]]):
+        self.fingerprint = fingerprint
+        self.num_nodes = num_nodes
+        self.matrix = matrix
+        self.names = names
+        self.index = index
+        self.slots = slots
+
+    @classmethod
+    def from_graph(cls, graph: OpGraph) -> "GraphFeatures":
+        rows: Dict[str, List[np.ndarray]] = {}
+        names: Dict[str, List[str]] = {}
+        index: Dict[str, List[int]] = {}
+        slots: List[Tuple[str, int]] = []
+        for k, node in enumerate(graph.nodes):
+            t = node.op_type
+            nm, x = featurize(graph, node)
+            if t not in names:
+                names[t] = list(nm)
+            slots.append((t, len(rows.setdefault(t, []))))
+            rows[t].append(x)
+            index.setdefault(t, []).append(k)
+        matrix = {t: np.stack(v) for t, v in rows.items()}
+        idx = {t: np.asarray(v, dtype=np.intp) for t, v in index.items()}
+        return cls(graph.fingerprint(), len(graph.nodes), matrix, names, idx, slots)
+
+    def node_features(self, k: int) -> np.ndarray:
+        """Feature vector of node ``k`` (a view into its type matrix)."""
+        t, row = self.slots[k]
+        return self.matrix[t][row]
+
+    def node_names(self, k: int) -> List[str]:
+        return self.names[self.slots[k][0]]
+
+
+_GRAPH_FEATURE_CACHE = LRUCache(maxsize=256)
+
+
+def graph_features(graph: OpGraph, *, cache: bool = True) -> GraphFeatures:
+    """`GraphFeatures` for ``graph``, LRU-cached by graph fingerprint.
+
+    NAS re-scoring, bank training, and profiling all hit this cache, so
+    a known graph is featurized exactly once per process (per cache
+    window).  ``fingerprint()`` carries its own staleness guard, so
+    builder-style mutations after caching get a fresh entry.
+    """
+    if not cache:
+        return GraphFeatures.from_graph(graph)
+    fp = graph.fingerprint()
+    gf = _GRAPH_FEATURE_CACHE.get(fp)
+    if gf is None or gf.num_nodes != len(graph.nodes):
+        gf = GraphFeatures.from_graph(graph)
+        _GRAPH_FEATURE_CACHE[fp] = gf
+    return gf
+
+
+def graph_feature_cache_info() -> Dict[str, int]:
+    return {"size": len(_GRAPH_FEATURE_CACHE),
+            "capacity": _GRAPH_FEATURE_CACHE.maxsize}
+
+
+def clear_graph_feature_cache() -> None:
+    _GRAPH_FEATURE_CACHE.clear()

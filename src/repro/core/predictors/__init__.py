@@ -8,6 +8,7 @@ from repro.core.predictors.base import (
     load_predictor,
     relative_weights,
 )
+from repro.core.predictors.flat import FlatEnsemble
 from repro.core.predictors.gbdt import GBDTPredictor, fit_gbdt_with_cv
 from repro.core.predictors.lasso import LassoPredictor
 from repro.core.predictors.mlp import MLPPredictor
@@ -15,7 +16,7 @@ from repro.core.predictors.random_forest import RandomForestPredictor, fit_rf_wi
 
 __all__ = [
     "PREDICTORS", "Predictor", "Standardizer", "cross_val_mape", "grid_search",
-    "load_predictor", "relative_weights", "LassoPredictor",
+    "load_predictor", "relative_weights", "FlatEnsemble", "LassoPredictor",
     "RandomForestPredictor", "GBDTPredictor", "MLPPredictor", "fit_rf_with_cv",
     "fit_gbdt_with_cv",
 ]

@@ -78,6 +78,24 @@ class Predictor:
         x = np.asarray(x, dtype=np.float64)
         return np.maximum(self._predict(self.scaler.transform(x)), 0.0)
 
+    def _predict_oracle(self, xs: np.ndarray) -> np.ndarray:
+        # Tree families override with the per-row node-walk reference
+        # implementation; everything else has a single code path.
+        return self._predict(xs)
+
+    def predict_oracle(self, x: np.ndarray) -> np.ndarray:
+        """`predict` through the slow reference path (parity tests/bench)."""
+        x = np.asarray(x, dtype=np.float64)
+        return np.maximum(self._predict_oracle(self.scaler.transform(x)), 0.0)
+
+    def finalize(self) -> "Predictor":
+        """Build any compiled inference state eagerly (no-op by default).
+
+        Called after training / deserialization (`PredictorBank.warm`) so
+        the first serving query doesn't pay one-time compilation cost.
+        """
+        return self
+
     def mape(self, x: np.ndarray, y: np.ndarray) -> float:
         y = np.asarray(y, dtype=np.float64)
         pred = self.predict(x)

@@ -13,6 +13,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.predictors.base import PREDICTORS, Predictor, grid_search, relative_weights
+from repro.core.predictors.flat import FlattenedTreeModel
 from repro.core.predictors.trees import RegressionTree
 
 DEFAULT_GRID = tuple(
@@ -23,7 +24,7 @@ DEFAULT_GRID = tuple(
 
 
 @PREDICTORS.register("gbdt")
-class GBDTPredictor(Predictor):
+class GBDTPredictor(FlattenedTreeModel, Predictor):
     name = "gbdt"
 
     def __init__(self, n_stages: int = 200, learning_rate: float = 0.1,
@@ -40,6 +41,7 @@ class GBDTPredictor(Predictor):
         self.subsample = subsample
         self.trees: list[RegressionTree] = []
         self.f0: float = 0.0
+        self._init_flat()
 
     def _fit(self, xs: np.ndarray, y: np.ndarray) -> None:
         n = len(y)
@@ -63,11 +65,24 @@ class GBDTPredictor(Predictor):
             tree.fit(xs[idx], resid[idx], sample_weight=w[idx])
             f = f + self.learning_rate * tree.predict(xs)
             self.trees.append(tree)
+        self._invalidate_flat()
 
     def _predict(self, xs: np.ndarray) -> np.ndarray:
         out = np.full(len(xs), self.f0)
+        if not self.trees:
+            return out
+        vals = self.flat().predict_trees(xs, backend=self.inference_backend)
+        # Accumulate stage by stage in the oracle's order (out += lr·pred
+        # per stage) so results stay bit-identical; the expensive part —
+        # tree traversal — is already batched above.
+        for j in range(vals.shape[1]):
+            out += self.learning_rate * vals[:, j]
+        return out
+
+    def _predict_oracle(self, xs: np.ndarray) -> np.ndarray:
+        out = np.full(len(xs), self.f0)
         for tree in self.trees:
-            out += self.learning_rate * tree.predict(xs)
+            out += self.learning_rate * tree.predict_oracle(xs)
         return out
 
     # -- serialization --------------------------------------------------------
@@ -83,6 +98,7 @@ class GBDTPredictor(Predictor):
     def _state_from_json(self, d):
         self.f0 = float(d["f0"])
         self.trees = [RegressionTree.from_json(t) for t in d["trees"]]
+        self._invalidate_flat()
 
 
 def fit_gbdt_with_cv(x: np.ndarray, y: np.ndarray,

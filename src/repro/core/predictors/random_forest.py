@@ -11,6 +11,7 @@ from typing import Any, Optional, Sequence
 import numpy as np
 
 from repro.core.predictors.base import PREDICTORS, Predictor, grid_search, relative_weights
+from repro.core.predictors.flat import FlattenedTreeModel
 from repro.core.predictors.trees import RegressionTree
 
 DEFAULT_GRID = tuple(
@@ -21,7 +22,7 @@ DEFAULT_GRID = tuple(
 
 
 @PREDICTORS.register("rf")
-class RandomForestPredictor(Predictor):
+class RandomForestPredictor(FlattenedTreeModel, Predictor):
     name = "rf"
 
     def __init__(self, n_trees: int = 10, min_samples_split: int = 2,
@@ -35,6 +36,7 @@ class RandomForestPredictor(Predictor):
         self.seed = seed
         self.relative = relative
         self.trees: list[RegressionTree] = []
+        self._init_flat()
 
     def _fit(self, xs: np.ndarray, y: np.ndarray) -> None:
         rng = np.random.default_rng(self.seed)
@@ -51,9 +53,17 @@ class RandomForestPredictor(Predictor):
             )
             tree.fit(xs[idx], y[idx], sample_weight=w[idx])
             self.trees.append(tree)
+        self._invalidate_flat()
 
     def _predict(self, xs: np.ndarray) -> np.ndarray:
-        preds = np.stack([t.predict(xs) for t in self.trees])
+        vals = self.flat().predict_trees(xs, backend=self.inference_backend)
+        # (trees, rows) contiguous before the mean: same reduction layout
+        # as the oracle's np.stack(...).mean(axis=0), so results stay
+        # bit-identical (numpy's pairwise summation is layout-sensitive).
+        return np.ascontiguousarray(vals.T).mean(axis=0)
+
+    def _predict_oracle(self, xs: np.ndarray) -> np.ndarray:
+        preds = np.stack([t.predict_oracle(xs) for t in self.trees])
         return preds.mean(axis=0)
 
     # -- serialization --------------------------------------------------------
@@ -68,6 +78,7 @@ class RandomForestPredictor(Predictor):
 
     def _state_from_json(self, d):
         self.trees = [RegressionTree.from_json(t) for t in d["trees"]]
+        self._invalidate_flat()
 
 
 def fit_rf_with_cv(x: np.ndarray, y: np.ndarray,

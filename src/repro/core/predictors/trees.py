@@ -11,6 +11,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.predictors.flat import FlatEnsemble
+
 
 @dataclass
 class _Node:
@@ -32,6 +34,7 @@ class RegressionTree:
         self.max_features = max_features
         self.seed = seed
         self.nodes: List[_Node] = []
+        self._flat: Optional[FlatEnsemble] = None   # compiled form (lazy)
 
     # -- fitting -------------------------------------------------------------
     def fit(self, x: np.ndarray, y: np.ndarray,
@@ -40,6 +43,7 @@ class RegressionTree:
         y = np.asarray(y, dtype=np.float64)
         w = np.ones(len(y)) if sample_weight is None else np.asarray(sample_weight, dtype=np.float64)
         self.nodes = []
+        self._flat = None
         self._rng = np.random.default_rng(self.seed)
         self._build(x, y, w, np.arange(len(y)), depth=0)
         return self
@@ -131,7 +135,19 @@ class RegressionTree:
         return t
 
     # -- prediction -----------------------------------------------------------
+    def flat(self) -> FlatEnsemble:
+        """Struct-of-arrays form of this tree (built lazily, cached)."""
+        if self._flat is None or self._flat.n_nodes != len(self.nodes):
+            self._flat = FlatEnsemble.from_trees([self])
+        return self._flat
+
     def predict(self, x: np.ndarray) -> np.ndarray:
+        """Vectorized batched traversal (bit-identical to the node-walk)."""
+        x = np.asarray(x, dtype=np.float64)
+        return self.flat().predict_trees(x)[:, 0]
+
+    def predict_oracle(self, x: np.ndarray) -> np.ndarray:
+        """Reference per-row node-walk — kept as the parity-test oracle."""
         x = np.asarray(x, dtype=np.float64)
         out = np.empty(len(x))
         for i, row in enumerate(x):

@@ -24,9 +24,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import GraphExecutor, make_array
-from repro.core.features import featurize
+from repro.core.features import featurize, graph_features
 from repro.core.ir import OpGraph, OpNode, op_signature
 from repro.utils.logging import get_logger
+from repro.utils.lru import LRUCache
 from repro.utils.timing import time_callable
 
 log = get_logger("repro.profiler")
@@ -108,14 +109,27 @@ class ProfileSession:
 
     def __init__(self, *, warmup: int = 1, inner: int = 4, repeats: int = 3,
                  e2e_inner: int = 2, e2e_repeats: int = 3,
-                 store: Optional[Any] = None):
-        self.fn_cache: Dict[str, Callable] = {}
+                 store: Optional[Any] = None, fn_cache_size: int = 256):
+        # Compiled callables are bounded (LRU): across long suites the
+        # old unbounded dict pinned every jitted op fn for the process
+        # lifetime.  Latencies are scalars — they stay unbounded.
+        self.fn_cache: Dict[str, Callable] = LRUCache(fn_cache_size)
         self.latency_cache: Dict[str, float] = {}
         self.warmup, self.inner, self.repeats = warmup, inner, repeats
         self.e2e_inner, self.e2e_repeats = e2e_inner, e2e_repeats
         self.store = store
         self.measured_ops = 0
         self.measured_graphs = 0
+
+    def stats(self) -> Dict[str, int]:
+        """Session counters + cache occupancy (serving/ops introspection)."""
+        return {
+            "measured_ops": self.measured_ops,
+            "measured_graphs": self.measured_graphs,
+            "fn_cache_size": len(self.fn_cache),
+            "fn_cache_capacity": self.fn_cache.maxsize,
+            "latency_cache_size": len(self.latency_cache),
+        }
 
     # -- per-op ---------------------------------------------------------------
     def _op_inputs(self, graph: OpGraph, node: OpNode, dtype: str) -> List[Any]:
@@ -126,7 +140,14 @@ class ProfileSession:
             arrs.append(jnp.asarray(make_array(info.shape, dt, seed=17 + i, scale=1.0)))
         return arrs
 
-    def measure_op(self, graph: OpGraph, node: OpNode, setting: DeviceSetting) -> float:
+    def measure_op(self, graph: OpGraph, node: OpNode, setting: DeviceSetting,
+                   features: Optional[Tuple[List[str], np.ndarray]] = None) -> float:
+        """Measure one op (or serve it from cache/store).
+
+        ``features`` — precomputed ``(names, vector)`` for the node
+        (e.g. from `graph_features`); without it the node is featurized
+        here when a store write needs it.
+        """
         base_sig = op_signature(graph, node)
         sig = setting.dtype + ":" + base_sig
         if sig in self.latency_cache:
@@ -155,7 +176,7 @@ class ProfileSession:
         self.latency_cache[sig] = lat
         self.measured_ops += 1
         if self.store is not None:
-            names, vals = featurize(graph, node)
+            names, vals = features if features is not None else featurize(graph, node)
             self.store.put_op(setting, OpRecord(
                 signature=base_sig, op_type=node.op_type,
                 feature_names=list(names),
@@ -174,13 +195,23 @@ class ProfileSession:
                     self.latency_cache.setdefault(
                         setting.dtype + ":" + op.signature, op.latency_s)
                 return cached
+        # The LRU bound is for *cross-suite* growth; within one graph it
+        # must hold every node's compiled fn at once (GraphExecutor fills
+        # it up front, measure_op reads it back) or eviction would force
+        # a re-jit per evicted op.  Grow capacity to the largest graph
+        # profiled so far.
+        self.fn_cache.maxsize = max(self.fn_cache.maxsize, len(graph.nodes))
         ex = GraphExecutor(graph, mode=setting.mode, dtype=setting.dtype,
                            fn_cache=self.fn_cache)
         g = ex.exec_graph
+        # Featurize the exec graph once (cached by fingerprint); each
+        # node's vector is shared between the store write in measure_op
+        # and the OpRecord here (they used to be computed twice).
+        gf = graph_features(g)
         ops: List[OpRecord] = []
-        for node in g.nodes:
-            lat = self.measure_op(g, node, setting)
-            names, vals = featurize(g, node)
+        for k, node in enumerate(g.nodes):
+            names, vals = gf.node_names(k), gf.node_features(k)
+            lat = self.measure_op(g, node, setting, features=(names, vals))
             ops.append(OpRecord(
                 signature=op_signature(g, node),
                 op_type=node.op_type,

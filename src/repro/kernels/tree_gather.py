@@ -1,0 +1,65 @@
+"""`jax.jit` gather backend for flattened tree ensembles.
+
+Batched tree traversal is a pure gather workload: every (row × tree)
+slot holds a node id, and one step gathers (feature, threshold, child)
+for all slots at once.  Because leaves self-loop (`left == right ==
+self` in `FlatEnsemble`), the update is idempotent, so a fixed-depth
+`lax.fori_loop` of ``max_depth`` iterations needs no active mask — rows
+that reached a leaf simply stay put.  That keeps the whole traversal one
+XLA computation (no host sync per level), which wins once
+rows × trees is large; the numpy mask loop wins on small batches.
+
+Precision: runs at jax's default precision (float32 unless x64 is
+enabled), so predictions can differ from the float64 numpy backend in
+the last ulps — and near-tie thresholds can route differently.  The
+numpy backend stays the bit-exact default; this one is opt-in
+(``backend="jax"`` / ``"auto"``) for large-batch NAS scoring.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    HAS_JAX = True
+except Exception:                                     # pragma: no cover
+    HAS_JAX = False
+
+
+if HAS_JAX:
+    @partial(jax.jit, static_argnames=("depth",))
+    def _traverse(feature, threshold, left, right, value, roots, x, depth):
+        n = x.shape[0]
+        nid = jnp.tile(roots[None, :], (n, 1))            # (rows, trees)
+
+        def body(_, nid):
+            f = feature[nid]                              # gather per slot
+            thr = threshold[nid]
+            xv = jnp.take_along_axis(x, f, axis=1)        # x[row, f[row, tree]]
+            return jnp.where(xv <= thr, left[nid], right[nid])
+
+        nid = lax.fori_loop(0, depth, body, nid)
+        return value[nid]
+
+
+def predict_trees_jax(flat, x: np.ndarray) -> np.ndarray:
+    """(n_rows, n_trees) leaf values via the jit'd gather loop."""
+    if not HAS_JAX:                                       # pragma: no cover
+        raise RuntimeError("jax is unavailable — use the numpy tree backend")
+    args = flat._jax_args
+    if args is None:
+        # Leaves carry feature = -1; clamp to 0 so the take_along_axis
+        # gather stays in-bounds (self-looped slots ignore the compare).
+        args = (jnp.asarray(np.maximum(flat.feature, 0)),
+                jnp.asarray(flat.threshold),
+                jnp.asarray(flat.left),
+                jnp.asarray(flat.right),
+                jnp.asarray(flat.value),
+                jnp.asarray(flat.roots))
+        flat._jax_args = args
+    out = _traverse(*args, jnp.asarray(x), depth=max(1, flat.max_depth))
+    return np.asarray(out, dtype=np.float64)

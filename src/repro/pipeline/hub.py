@@ -40,6 +40,11 @@ class PredictorHub:
         # Bumped on every (re)train so caches keyed on hub output —
         # LatencyService's report LRU — know to invalidate.
         self.version = 0
+        # Training-dataset assembly cache: training several families on
+        # the same (setting, split) reuses one LatencyDataset (and its
+        # one-pass per-type tables) instead of re-reading the store.
+        # Keyed with len(store) so new measurements invalidate.
+        self._ds_cache: Dict[Tuple, Any] = {}
 
     # -- training ------------------------------------------------------------
     def train(
@@ -65,12 +70,27 @@ class PredictorHub:
                              f"known: {FAMILIES}")
         from repro.core.dataset import LatencyDataset, fit_predictor_bank
 
-        archs = store.arch_records(setting, fingerprints=fingerprints)
-        if not archs:
-            raise ValueError(
-                f"store has no arch records for {setting_key(setting)} — "
-                f"profile graphs through a store-backed ProfileSession first")
-        ds = LatencyDataset(setting_key(setting), archs)
+        # Record counts guard freshness (arch count catches warm-store
+        # profiling that adds an arch without new op measurements); the
+        # store object itself is held in the entry and compared by
+        # identity — an id()-keyed entry could alias a new store that
+        # reused a dead one's address.
+        counts = store.stats()
+        ds_key = (counts["op_records"], counts["arch_records"],
+                  setting_key(setting),
+                  None if fingerprints is None else tuple(fingerprints))
+        cached = self._ds_cache.get(ds_key)
+        if cached is not None and cached[0] is store:
+            ds = cached[1]
+        else:
+            archs = store.arch_records(setting, fingerprints=fingerprints)
+            if not archs:
+                raise ValueError(
+                    f"store has no arch records for {setting_key(setting)} — "
+                    f"profile graphs through a store-backed ProfileSession first")
+            ds = LatencyDataset(setting_key(setting), archs)
+            self._ds_cache.clear()          # keep only the latest assembly
+            self._ds_cache[ds_key] = (store, ds)
         bank = fit_predictor_bank(ds, family, hparams=hparams,
                                   min_samples=min_samples, seed=seed,
                                   overhead_model=overhead_model)
@@ -78,7 +98,7 @@ class PredictorHub:
         self.banks[key] = bank
         self.version += 1
         log.info("trained %s bank for %s on %d archs (%d op types)",
-                 family, key[0], len(archs), len(bank.predictors))
+                 family, key[0], len(ds.archs), len(bank.predictors))
         if save and self.root:
             self.save_bank(setting, family)
         return bank

@@ -10,10 +10,12 @@ bank, with two serving-oriented layers on top:
   * a graph-fingerprint LRU cache — repeated queries for the same
     architecture (NAS loops re-scoring candidates, serving admission
     control) skip featurization and prediction entirely;
-  * batched multi-graph queries — `predict_batch` featurizes every
-    uncached graph, groups rows by op type, and calls each per-type
-    predictor once over the whole batch (vectorized for lasso/MLP,
-    single tree-walk loop for RF/GBDT) instead of once per op.
+  * batched multi-graph queries — `predict_batch` pulls each uncached
+    graph's `GraphFeatures` (featurized once per fingerprint, process-
+    wide), groups matrices by op type, and calls each per-type
+    predictor once over the whole batch; RF/GBDT run their flattened
+    struct-of-arrays ensembles (docs/PIPELINE.md "Prediction fast
+    path") instead of per-row node walks.
 
 GPU-like settings (``fused_groups``) are predicted on the fused graph,
 mirroring how they were profiled.
@@ -27,7 +29,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.composition import PredictorBank
-from repro.core.features import featurize
+from repro.core.features import graph_features
 from repro.core.fusion import fuse_graph
 from repro.core.ir import OpGraph
 from repro.core.profiler import DeviceSetting, ProfileSession
@@ -183,25 +185,30 @@ class LatencyService:
         for i, fp, g in fresh:
             exec_graphs.append(fuse_graph(g)[1] if setting.is_gpu_like else g)
 
-        # Gather features grouped by op type across every fresh graph.
-        rows: Dict[str, List[np.ndarray]] = {}
+        # Gather feature matrices grouped by op type across every fresh
+        # graph.  `graph_features` memoizes per fingerprint, so a graph
+        # the process has seen before (NAS re-scoring after a cache
+        # clear, retraining) contributes without re-running featurizers.
+        mats: Dict[str, List[np.ndarray]] = {}
         slots: Dict[str, List[Tuple[int, int]]] = {}  # op_type → (fresh idx, node idx)
         for j, g in enumerate(exec_graphs):
-            for k, node in enumerate(g.nodes):
-                _, x = featurize(g, node)
-                rows.setdefault(node.op_type, []).append(x)
-                slots.setdefault(node.op_type, []).append((j, k))
+            gf = graph_features(g)
+            for op_type, x in gf.matrix.items():
+                mats.setdefault(op_type, []).append(x)
+                slots.setdefault(op_type, []).extend(
+                    (j, int(k)) for k in gf.index[op_type])
 
         # One predictor call per op type; unseen types contribute 0
         # (same fallback as PredictorBank.predict_op).
         per_op: List[List[Optional[Tuple[str, float]]]] = [
             [None] * len(g.nodes) for g in exec_graphs]
-        for op_type, xs in rows.items():
+        for op_type, xs in mats.items():
+            x = xs[0] if len(xs) == 1 else np.concatenate(xs, axis=0)
             model = bank.predictors.get(op_type)
             if model is None:
-                preds = np.zeros(len(xs))
+                preds = np.zeros(len(x))
             else:
-                preds = model.predict(np.stack(xs))   # already clamped ≥ 0
+                preds = model.predict(x)              # already clamped ≥ 0
             for (j, k), p in zip(slots[op_type], preds):
                 per_op[j][k] = (op_type, float(p))
 

@@ -1,0 +1,43 @@
+"""Small bounded LRU mapping (dict-compatible).
+
+Used where an unbounded dict used to grow for the life of a process:
+`ProfileSession.fn_cache` (compiled per-op callables) and the module
+feature-matrix cache in `repro.core.features`.  Reads refresh recency;
+inserts evict the least-recently-used entry past ``maxsize``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable
+
+
+class LRUCache(OrderedDict):
+    """An OrderedDict capped at ``maxsize`` entries with LRU eviction.
+
+    Drop-in for plain dicts used as caches (`get`/`[]`/`in`): consumers
+    like `GraphExecutor(fn_cache=...)` need no changes.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        super().__init__()
+        self.maxsize = max(1, int(maxsize))
+
+    def get(self, key: Hashable, default: Any = None) -> Any:
+        if key in self:
+            self.move_to_end(key)
+            return super().__getitem__(key)
+        return default
+
+    def __getitem__(self, key: Hashable) -> Any:
+        val = super().__getitem__(key)
+        self.move_to_end(key)
+        return val
+
+    def __setitem__(self, key: Hashable, value: Any) -> None:
+        super().__setitem__(key, value)
+        self.move_to_end(key)
+        while len(self) > self.maxsize:
+            # NOT popitem(): OrderedDict.popitem re-enters the overridden
+            # __getitem__ after unlinking the entry, which then KeyErrors
+            # in move_to_end.
+            del self[next(iter(self))]

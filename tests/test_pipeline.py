@@ -207,6 +207,17 @@ class TestHubAndService:
         g = graphs[0]
         assert bank2.predict_graph(g) == bank.predict_graph(g)
 
+    def test_multi_family_training_reuses_dataset(self, tmp_path):
+        store, _, graphs = _profiled_store(tmp_path)
+        hub = PredictorHub()
+        b1 = hub.train(store, SETTING, "lasso", min_samples=2)
+        # Second family on the unchanged store hits the dataset-assembly
+        # cache (regression: this used to crash with UnboundLocalError).
+        b2 = hub.train(store, SETTING, "gbdt", hparams={"n_stages": 10},
+                       min_samples=2)
+        assert len(hub) == 2
+        assert sorted(b1.predictors) == sorted(b2.predictors)
+
     def test_predict_e2e_cache_and_batch(self, tmp_path):
         store, session, graphs = _profiled_store(tmp_path)
         svc = LatencyService.build(graphs, SETTING, session=session,

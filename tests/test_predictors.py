@@ -99,3 +99,55 @@ def test_gbdt_improves_with_stages():
     few = GBDTPredictor(n_stages=5).fit(x[:300], y[:300]).mape(x[300:], y[300:])
     many = GBDTPredictor(n_stages=150).fit(x[:300], y[:300]).mape(x[300:], y[300:])
     assert many < few
+
+
+# ---------------------------------------------------------------------------
+# Flattened fast path ≡ node-walk oracle (property tests)
+# ---------------------------------------------------------------------------
+
+def _random_regression(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)) * np.linspace(1, 20, d)
+    y = x @ rng.random(d) + rng.standard_normal(n)
+    return x, y
+
+
+class TestFlattenedParity:
+    """Batched struct-of-arrays traversal must be bit-identical to the
+    per-row node walk — including on training rows, which can sit
+    exactly on split thresholds."""
+
+    @given(st.integers(10, 120), st.integers(1, 6), st.integers(1, 10),
+           st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_tree_parity(self, n, d, depth, seed):
+        x, y = _random_regression(n, d, seed)
+        t = RegressionTree(max_depth=depth, seed=seed).fit(x, y)
+        q = np.vstack([x, _random_regression(64, d, seed + 1)[0]])
+        assert np.array_equal(t.predict(q), t.predict_oracle(q))
+
+    @given(st.integers(30, 100), st.integers(2, 5), st.integers(1, 8),
+           st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_rf_parity(self, n, d, n_trees, seed):
+        x, y = _random_regression(n, d, seed)
+        m = RandomForestPredictor(n_trees=n_trees, max_depth=6, seed=seed).fit(x, y)
+        q = np.vstack([x, _random_regression(32, d, seed + 1)[0]])
+        assert np.array_equal(m.predict(q), m.predict_oracle(q))
+
+    @given(st.integers(30, 100), st.integers(2, 5), st.integers(1, 40),
+           st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_gbdt_parity(self, n, d, n_stages, seed):
+        x, y = _random_regression(n, d, seed)
+        m = GBDTPredictor(n_stages=n_stages, seed=seed).fit(x, y)
+        q = np.vstack([x, _random_regression(32, d, seed + 1)[0]])
+        assert np.array_equal(m.predict(q), m.predict_oracle(q))
+
+    def test_single_leaf_tree(self):
+        # Constant labels → depth-0 tree (root is the only node).
+        x = np.ones((10, 3))
+        y = np.full(10, 7.0)
+        t = RegressionTree().fit(x, y)
+        assert t.flat().max_depth == 0
+        assert np.array_equal(t.predict(x), np.full(10, 7.0))
