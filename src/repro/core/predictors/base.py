@@ -131,6 +131,14 @@ def load_predictor(d: Dict[str, Any]) -> "Predictor":
     """Rebuild a fitted predictor from `Predictor.to_json` output."""
     import repro.core.predictors  # noqa: F401 — populate the registry
 
+    if d["name"] not in PREDICTORS:
+        # Higher layers register extra families (the transfer layer's
+        # "calibrated" wrapper); pull them in lazily so a bank saved by
+        # that layer loads in a process that never imported it.
+        try:
+            import repro.transfer.calibration  # noqa: F401
+        except ImportError:  # pragma: no cover - transfer layer absent
+            pass
     model: Predictor = PREDICTORS.get(d["name"])(**d["config"])
     model.scaler = Standardizer.from_json(d["scaler"])
     model._state_from_json(d["state"])

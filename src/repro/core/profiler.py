@@ -35,11 +35,29 @@ log = get_logger("repro.profiler")
 
 @dataclass(frozen=True)
 class DeviceSetting:
-    """One measurement scenario (paper's device × setting grid)."""
+    """One measurement scenario (paper's device × setting grid).
+
+    ``device`` is a physical-device identity tag.  It defaults to empty —
+    the single-device keys (`"dtype/mode"`) every store/hub was built
+    with stay unchanged — and is set by the cross-device transfer layer
+    (`repro.transfer`) so banks for a *target* device coexist in one hub
+    with the profiled source device's banks.
+    """
 
     name: str
     dtype: str = "float32"         # float32 | int8
     mode: str = "op_by_op"         # op_by_op (CPU) | fused_groups (GPU-like)
+    device: str = ""               # physical-device tag ("" = the local device)
+
+    def __post_init__(self) -> None:
+        # The tag is embedded in store/hub keys and bank *filenames*
+        # ("tag:dtype/mode" → "bank__tag:dtype__mode__family.json"), so
+        # the delimiters those schemes split on must not appear in it.
+        if "/" in self.device or "__" in self.device or ":" in self.device:
+            raise ValueError(
+                f"DeviceSetting.device {self.device!r} must not contain "
+                f"'/', ':' or '__' (they delimit setting keys and bank "
+                f"filenames)")
 
     @property
     def is_gpu_like(self) -> bool:
@@ -51,6 +69,17 @@ DEFAULT_SETTINGS = (
     DeviceSetting("cpu_int8", "int8", "op_by_op"),
     DeviceSetting("gpu_f32", "float32", "fused_groups"),
 )
+
+
+def latency_axis(setting: DeviceSetting) -> str:
+    """In-process latency-cache prefix: device tag + dtype.
+
+    Mirrors the store's `op_axis` (which lives in the pipeline layer):
+    measurements for a tagged device must never alias the local
+    device's, even inside one session.  Compiled-callable caches stay
+    dtype-keyed — jitted fns are identical across device tags.
+    """
+    return f"{setting.device}:{setting.dtype}" if setting.device else setting.dtype
 
 
 @dataclass
@@ -109,7 +138,8 @@ class ProfileSession:
 
     def __init__(self, *, warmup: int = 1, inner: int = 4, repeats: int = 3,
                  e2e_inner: int = 2, e2e_repeats: int = 3,
-                 store: Optional[Any] = None, fn_cache_size: int = 256):
+                 store: Optional[Any] = None, fn_cache_size: int = 256,
+                 latency_transform: Optional[Callable[[str, float], float]] = None):
         # Compiled callables are bounded (LRU): across long suites the
         # old unbounded dict pinned every jitted op fn for the process
         # lifetime.  Latencies are scalars — they stay unbounded.
@@ -118,6 +148,12 @@ class ProfileSession:
         self.warmup, self.inner, self.repeats = warmup, inner, repeats
         self.e2e_inner, self.e2e_repeats = e2e_inner, e2e_repeats
         self.store = store
+        # Optional (kind, seconds) → seconds map applied to every raw
+        # measurement, where kind is the op type or "e2e".  Lets a
+        # *real-measurement* session stand in for a differently-scaled
+        # device without touching the timing methodology (store-replayed
+        # synthetic devices instead override the _time_* hooks below).
+        self.latency_transform = latency_transform
         self.measured_ops = 0
         self.measured_graphs = 0
 
@@ -148,8 +184,23 @@ class ProfileSession:
         (e.g. from `graph_features`); without it the node is featurized
         here when a store write needs it.
         """
-        base_sig = op_signature(graph, node)
-        sig = setting.dtype + ":" + base_sig
+        return self._serve_op_latency(
+            setting, op_signature(graph, node), node.op_type, node.fused,
+            lambda: (features if features is not None
+                     else featurize(graph, node)),
+            lambda: self._time_op(graph, node, setting))
+
+    def _serve_op_latency(self, setting: DeviceSetting, base_sig: str,
+                          op_type: str, fused: Sequence[str],
+                          get_features: Callable[[], Tuple],
+                          produce: Callable[[], float]) -> float:
+        """Cache → store read-through → ``produce()`` → count + write-back.
+
+        The one place measurement bookkeeping lives: `measure_op` and
+        record-level entry points (replay sessions' ``measure_record``)
+        share it, so budget counting and store semantics cannot drift.
+        """
+        sig = latency_axis(setting) + ":" + base_sig
         if sig in self.latency_cache:
             return self.latency_cache[sig]
         if self.store is not None:
@@ -157,6 +208,26 @@ class ProfileSession:
             if rec is not None:
                 self.latency_cache[sig] = rec.latency_s
                 return rec.latency_s
+        lat = produce()
+        if self.latency_transform is not None:
+            lat = float(self.latency_transform(op_type, lat))
+        self.latency_cache[sig] = lat
+        self.measured_ops += 1
+        if self.store is not None:
+            names, vals = get_features()
+            self.store.put_op(setting, OpRecord(
+                signature=base_sig, op_type=op_type,
+                feature_names=list(names),
+                features=[float(v) for v in vals],
+                latency_s=lat, fused=list(fused)))
+        return lat
+
+    def _time_op(self, graph: OpGraph, node: OpNode,
+                 setting: DeviceSetting) -> float:
+        """Raw wall-clock measurement of one op (override point: replay /
+        simulated sessions substitute a latency source without touching
+        the caching, counting, and store write-back in `measure_op`)."""
+        sig = setting.dtype + ":" + op_signature(graph, node)
         if setting.dtype == "int8":
             from repro.quant.int8 import build_quant_op_fn as builder
         else:
@@ -172,29 +243,13 @@ class ProfileSession:
         # keeps measurement noise on µs-scale ops bounded.
         est = time_callable(jfn, args, warmup=self.warmup, inner=2, repeats=1)
         inner = int(np.clip(np.ceil(1.5e-3 / max(est, 1e-7)), self.inner, 256))
-        lat = time_callable(jfn, args, warmup=0, inner=inner, repeats=self.repeats)
-        self.latency_cache[sig] = lat
-        self.measured_ops += 1
-        if self.store is not None:
-            names, vals = features if features is not None else featurize(graph, node)
-            self.store.put_op(setting, OpRecord(
-                signature=base_sig, op_type=node.op_type,
-                feature_names=list(names),
-                features=[float(v) for v in vals],
-                latency_s=lat, fused=list(node.fused)))
-        return lat
+        return time_callable(jfn, args, warmup=0, inner=inner,
+                             repeats=self.repeats)
 
     # -- whole graph ------------------------------------------------------------
-    def profile_graph(self, graph: OpGraph, setting: DeviceSetting) -> ArchRecord:
-        if self.store is not None:
-            cached = self.store.get_arch(setting, graph.fingerprint())
-            if cached is not None:
-                # Hydrate the in-process cache so sibling graphs sharing
-                # signatures also skip measurement.
-                for op in cached.ops:
-                    self.latency_cache.setdefault(
-                        setting.dtype + ":" + op.signature, op.latency_s)
-                return cached
+    def _prepare_exec(self, graph: OpGraph, setting: DeviceSetting
+                      ) -> Tuple[OpGraph, Optional[GraphExecutor]]:
+        """(exec graph, runner) for one profiling pass (override point)."""
         # The LRU bound is for *cross-suite* growth; within one graph it
         # must hold every node's compiled fn at once (GraphExecutor fills
         # it up front, measure_op reads it back) or eviction would force
@@ -203,7 +258,31 @@ class ProfileSession:
         self.fn_cache.maxsize = max(self.fn_cache.maxsize, len(graph.nodes))
         ex = GraphExecutor(graph, mode=setting.mode, dtype=setting.dtype,
                            fn_cache=self.fn_cache)
-        g = ex.exec_graph
+        return ex.exec_graph, ex
+
+    def _time_e2e(self, runner: Optional[GraphExecutor], g: OpGraph,
+                  setting: DeviceSetting, ops: Sequence[OpRecord]) -> float:
+        """End-to-end latency of one prepared graph (override point)."""
+        inputs = runner.example_inputs()
+        # CPU-like settings: strictly sequential (TFLite interpreter).
+        # GPU-like settings: stream dispatch (OpenCL command queue).
+        sync = not setting.is_gpu_like
+        return time_callable(lambda *a: runner(*a, sync_per_op=sync), inputs,
+                             warmup=1, inner=self.e2e_inner,
+                             repeats=self.e2e_repeats)
+
+    def profile_graph(self, graph: OpGraph, setting: DeviceSetting) -> ArchRecord:
+        if self.store is not None:
+            cached = self.store.get_arch(setting, graph.fingerprint())
+            if cached is not None:
+                # Hydrate the in-process cache so sibling graphs sharing
+                # signatures also skip measurement.
+                for op in cached.ops:
+                    self.latency_cache.setdefault(
+                        latency_axis(setting) + ":" + op.signature,
+                        op.latency_s)
+                return cached
+        g, runner = self._prepare_exec(graph, setting)
         # Featurize the exec graph once (cached by fingerprint); each
         # node's vector is shared between the store write in measure_op
         # and the OpRecord here (they used to be computed twice).
@@ -220,12 +299,9 @@ class ProfileSession:
                 latency_s=lat,
                 fused=list(node.fused),
             ))
-        inputs = ex.example_inputs()
-        # CPU-like settings: strictly sequential (TFLite interpreter).
-        # GPU-like settings: stream dispatch (OpenCL command queue).
-        sync = not setting.is_gpu_like
-        e2e = time_callable(lambda *a: ex(*a, sync_per_op=sync), inputs,
-                            warmup=1, inner=self.e2e_inner, repeats=self.e2e_repeats)
+        e2e = self._time_e2e(runner, g, setting, ops)
+        if self.latency_transform is not None:
+            e2e = float(self.latency_transform("e2e", e2e))
         rec = ArchRecord(
             name=graph.name,
             e2e_s=e2e,

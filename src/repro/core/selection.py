@@ -42,6 +42,8 @@ class DeviceProfile:
     link_bw: float = 0.0           # bytes/s per ICI link
     vmem_bytes: int = 0
     mxu_dim: int = 128
+    cores: int = 1                 # compute cores the runtime schedules on
+    freq_ghz: float = 0.0          # nominal clock (0 = unknown)
     supports_fusion: bool = True
     supports_winograd: bool = True
 
@@ -64,6 +66,7 @@ DEVICE_PROFILES: Dict[str, DeviceProfile] = {
     "cpu_xla": DeviceProfile(
         "cpu_xla", CPU_XLA,
         peak_flops=50e9, hbm_bw=10e9, link_bw=1e9,
+        cores=1, freq_ghz=2.2,
         supports_winograd=False,
     ),
 }

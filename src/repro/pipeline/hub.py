@@ -103,6 +103,20 @@ class PredictorHub:
             self.save_bank(setting, family)
         return bank
 
+    def register(self, setting: DeviceSetting, family: str,
+                 bank: PredictorBank, *, save: bool = False) -> PredictorBank:
+        """Install an externally-built bank (e.g. a transfer-calibrated
+        one) under ``(setting, family)``; bumps the version so service
+        caches invalidate, and optionally persists it under ``root``."""
+        key = (setting_key(setting), family)
+        self.banks[key] = bank
+        self.version += 1
+        log.info("registered %s bank for %s (%d op types)",
+                 family, key[0], len(bank.predictors))
+        if save and self.root:
+            self._write_bank(key[0], family, bank)
+        return bank
+
     # -- lookup --------------------------------------------------------------
     def get(self, setting: DeviceSetting, family: str = "gbdt"
             ) -> Optional[PredictorBank]:
@@ -145,18 +159,34 @@ class PredictorHub:
 
     @classmethod
     def load(cls, root: str) -> "PredictorHub":
-        """Restore every ``bank__*.json`` under ``root``."""
+        """Restore every ``bank__*.json`` under ``root``.
+
+        Non-bank and malformed JSON files are skipped with a warning
+        rather than raising: a hub directory may also hold sibling
+        artifacts (transfer calibration maps, notes, reports).
+        """
         hub = cls(root)
         if os.path.isdir(root):
             for fn in sorted(os.listdir(root)):
                 if not (fn.startswith("bank__") and fn.endswith(".json")):
                     continue
-                # Re-derive the key from the filename: dtype__mode__family.
+                # Re-derive the key from the filename:
+                # [device:]dtype__mode__family.
                 stem = fn[len("bank__"):-len(".json")]
                 parts = stem.split("__")
+                if len(parts) < 3:
+                    log.warning("skipping %s: not a bank filename", fn)
+                    continue
                 key, family = "/".join(parts[:-1]), parts[-1]
-                with open(os.path.join(root, fn)) as f:
-                    hub.banks[(key, family)] = PredictorBank.from_json(json.load(f))
+                path = os.path.join(root, fn)
+                try:
+                    with open(path) as f:
+                        bank = PredictorBank.from_json(json.load(f))
+                except (json.JSONDecodeError, KeyError, TypeError,
+                        ValueError, OSError) as e:
+                    log.warning("skipping %s: not a loadable bank (%s)", fn, e)
+                    continue
+                hub.banks[(key, family)] = bank
         return hub
 
     def __len__(self) -> int:

@@ -19,6 +19,11 @@ bank, with two serving-oriented layers on top:
 
 GPU-like settings (``fused_groups``) are predicted on the fused graph,
 mirroring how they were profiled.
+
+One service can serve many devices: banks registered in the hub under
+device-tagged setting keys (`repro.transfer`'s calibrated target banks)
+resolve through the same ``predict_e2e(graph, setting)`` call — the
+setting's key picks the bank, and reports/caches are keyed per device.
 """
 from __future__ import annotations
 
@@ -224,6 +229,13 @@ class LatencyService:
             self._insert((fp, skey, family), report)
             out[i] = report
         return out  # type: ignore[return-value]
+
+    # -- introspection -------------------------------------------------------
+    def available(self) -> List[Tuple[str, str]]:
+        """(setting key, family) of every in-memory bank — the scenarios
+        this service can answer for right now (transfer-registered
+        target devices included)."""
+        return sorted(self.hub.banks)
 
     # -- cache ---------------------------------------------------------------
     def _insert(self, key: Tuple[str, str, str], report: PredictionReport) -> None:

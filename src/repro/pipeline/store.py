@@ -21,8 +21,11 @@ executed (fusion rewrites nodes, which changes their signatures), not the
 latency of a given kernel, so float32 measurements are shared between
 op_by_op and fused_groups scenarios — the same sharing
 `ProfileSession.latency_cache` always did in-process.  Arch records
-(end-to-end latency) are keyed by ``dtype/mode``.  Do not point settings
-for two different physical devices at the same store file.
+(end-to-end latency) are keyed by ``dtype/mode``.  Settings for a second
+physical device must carry a distinct ``DeviceSetting.device`` tag —
+the tag prefixes both keys, so tagged target-device measurements (the
+transfer layer) can share a file without aliasing; untagged settings
+for different devices must keep separate files.
 
 Appends are flushed per record; on load, the last line for a key wins,
 so interrupted runs at worst lose the final record.
@@ -42,17 +45,28 @@ log = get_logger("repro.pipeline.store")
 
 
 def op_axis(setting: DeviceSetting) -> str:
-    """Projection of a DeviceSetting onto what per-op latency depends on."""
-    return setting.dtype
+    """Projection of a DeviceSetting onto what per-op latency depends on.
+
+    The optional ``setting.device`` tag prefixes the axis so measurements
+    for a *different physical device* (transfer targets) never alias the
+    local device's records, even when they share a store file.
+    """
+    device = getattr(setting, "device", "")
+    return f"{device}:{setting.dtype}" if device else setting.dtype
 
 
 def setting_key(setting: DeviceSetting) -> str:
-    """Canonical key for end-to-end scenarios (dtype × executor mode).
+    """Canonical key for end-to-end scenarios (device × dtype × mode).
 
-    Deliberately excludes ``setting.name`` — on one physical device the
-    label doesn't change what runs.  A store file is per-device.
+    Deliberately excludes ``setting.name`` — a display label doesn't
+    change what runs.  ``setting.device`` (physical-device identity) is
+    included when set, so hubs and services can serve several devices;
+    with the default empty tag the key stays the historical
+    ``"dtype/mode"``.
     """
-    return f"{setting.dtype}/{setting.mode}"
+    base = f"{setting.dtype}/{setting.mode}"
+    device = getattr(setting, "device", "")
+    return f"{device}:{base}" if device else base
 
 
 class ProfileStore:
@@ -69,6 +83,10 @@ class ProfileStore:
         self.hits = 0
         self.misses = 0
         self._fh = None
+        # Lines currently on disk (records + duplicates + malformed) —
+        # the append-only file grows past the deduped in-memory maps
+        # whenever runs overlap or crash mid-write; `compact` reclaims it.
+        self._file_lines = 0
         if path and os.path.exists(path):
             self._load(path)
 
@@ -80,6 +98,7 @@ class ProfileStore:
                 line = line.strip()
                 if not line:
                     continue
+                self._file_lines += 1
                 try:
                     d = json.loads(line)
                     if d["kind"] == "op":
@@ -104,6 +123,48 @@ class ProfileStore:
             self._fh = open(self.path, "a")
         self._fh.write(json.dumps(d) + "\n")
         self._fh.flush()
+        self._file_lines += 1
+
+    def compact(self) -> Dict[str, int]:
+        """Rewrite the backing ``.jsonl`` with one line per live record.
+
+        The file is append-only; last-line-wins on load means duplicate
+        keys (overlapping runs, crashed writers, hand-merged files) cost
+        disk and load time but never correctness.  Compaction writes the
+        deduped in-memory state to a temp file and atomically replaces
+        the original.  If another writer appended lines since this store
+        loaded (on-disk line count ≠ ours), the file is re-read first so
+        their records are merged, not clobbered.  Returns
+        ``{"kept", "dropped"}`` line counts.
+        """
+        if not self.path:
+            return {"kept": len(self._ops) + len(self._archs), "dropped": 0}
+        self.close()
+        if os.path.exists(self.path):
+            with open(self.path) as f:
+                n_disk = sum(1 for line in f if line.strip())
+            if n_disk != self._file_lines:
+                log.info("compact: %s changed under us (%d vs %d lines); "
+                         "merging before rewrite", self.path, n_disk,
+                         self._file_lines)
+                self._file_lines = 0
+                self._load(self.path)
+        kept = len(self._ops) + len(self._archs)
+        dropped = max(0, self._file_lines - kept)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            for (axis, _), rec in sorted(self._ops.items(), key=lambda kv: kv[0]):
+                f.write(json.dumps({"kind": "op", "axis": axis,
+                                    **rec.to_json()}) + "\n")
+            for (sk, fp), rec in sorted(self._archs.items(), key=lambda kv: kv[0]):
+                f.write(json.dumps({"kind": "arch", "setting": sk, "fp": fp,
+                                    "arch": rec.to_json()}) + "\n")
+        os.replace(tmp, self.path)
+        self._file_lines = kept
+        if dropped:
+            log.info("compacted %s: kept %d records, dropped %d stale lines",
+                     self.path, kept, dropped)
+        return {"kept": kept, "dropped": dropped}
 
     def flush(self) -> None:
         if self._fh is not None:
@@ -185,10 +246,18 @@ class ProfileStore:
         axis = op_axis(setting)
         return sorted({r.op_type for (a, _), r in self._ops.items() if a == axis})
 
+    def op_records(self, setting: DeviceSetting) -> List[OpRecord]:
+        """Every stored op record on this setting's axis, sorted by
+        signature (deterministic order — the transfer sampler's input)."""
+        axis = op_axis(setting)
+        return [rec for (a, sig), rec in
+                sorted(self._ops.items(), key=lambda kv: kv[0]) if a == axis]
+
     # -- stats ---------------------------------------------------------------
     def __len__(self) -> int:
         return len(self._ops)
 
     def stats(self) -> Dict[str, int]:
         return {"op_records": len(self._ops), "arch_records": len(self._archs),
+                "file_lines": self._file_lines,
                 "hits": self.hits, "misses": self.misses}
