@@ -21,6 +21,7 @@ BENCHES = [
     ("predict", "benchmarks.bench_predict"),                  # docs/PIPELINE.md
     ("graph_index", "benchmarks.bench_graph_index"),          # docs/PIPELINE.md
     ("transfer", "benchmarks.bench_transfer"),                # docs/PIPELINE.md
+    ("search", "benchmarks.bench_search"),                    # docs/PIPELINE.md
     ("multicore", "benchmarks.bench_multicore"),              # Fig. 2/3
     ("quantization", "benchmarks.bench_quantization"),        # Fig. 4/5
     ("fusion", "benchmarks.bench_fusion"),                    # Fig. 6/7

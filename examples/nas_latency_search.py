@@ -1,12 +1,19 @@
 """Latency-constrained NAS — the paper's motivating application.
 
-Search the synthetic NAS space for the architecture with the best
-(proxy) quality under a latency budget, WITHOUT measuring candidates:
-`LatencyService.predict_batch` scores all 200 candidates in one batched
-query (paper §1: measuring every candidate on-device is impractical;
-predictions make search scale).  Verifies the winner's predicted
-latency by actually measuring — through the same ProfileStore, so the
-verification measurement is itself persisted for future runs.
+Evolutionary search over the synthetic NAS space with `repro.search`:
+candidates are never measured — every generation is scored through ONE
+`LatencyService.predict_batch` call per device (paper §1: measuring
+every candidate on-device is impractical; predictions make search
+scale).  Two runs:
+
+  1. single-device: evolve a latency/quality Pareto front under a
+     budget on the profiled device, then verify the front by actually
+     measuring it (through the same ProfileStore, so the verification
+     measurements are persisted for future runs);
+  2. two-device: adapt the profiled device to a synthetic second device
+     with a 32-measurement transfer budget (`repro.transfer`), then
+     search under BOTH devices' budgets at once — the front only admits
+     candidates that fit everywhere.
 
   PYTHONPATH=src python examples/nas_latency_search.py
 """
@@ -15,57 +22,82 @@ import os
 import numpy as np
 
 from repro.core.dataset import synthetic_graphs
-from repro.core.features import featurize
-from repro.core.nas_space import NASSpaceConfig, sample_architecture
 from repro.core.profiler import DeviceSetting, ProfileSession
 from repro.pipeline import LatencyService
+from repro.search import DeviceBudget, SearchConfig, SearchEngine
+from repro.transfer import (ReplayProfileSession, SyntheticDevice,
+                            TransferEngine)
 
 STORE = os.path.join(os.path.dirname(__file__), "..", "reports",
                      "nas_search_store.jsonl")
+SETTING = DeviceSetting("cpu_f32", "float32", "op_by_op")
+SECOND = DeviceSetting("edge2", "float32", "op_by_op", device="edge2")
 
 
-def proxy_quality(graph) -> float:
-    """A stand-in accuracy proxy: log total FLOPs (capacity)."""
-    total = 0.0
-    for node in graph.nodes:
-        names, vals = featurize(graph, node)
-        total += dict(zip(names, vals)).get("flops", 0.0)
-    return float(np.log(max(total, 1.0)))
+def show_front(report, keys) -> None:
+    for m in report.front:
+        lats = "  ".join(f"{k}: {1e3 * m.latencies[k]:6.2f} ms" for k in keys)
+        print(f"  {m.digest}  quality {m.quality:5.2f}  {lats}")
 
 
 def main() -> None:
-    setting = DeviceSetting("cpu_f32", "float32", "op_by_op")
     print("== profile 25 architectures to train the predictor ==")
     train_graphs = synthetic_graphs(25, resolution=32)
     svc = LatencyService.build(
-        train_graphs, setting,
+        train_graphs, SETTING,
         store=STORE,
         session=ProfileSession(repeats=2, inner=3),
         predictor="gbdt", overhead_model="affine",
     )
-
-    print("== score 200 candidates by PREDICTED latency (one batched query) ==")
     # Budget from THIS run's training suite (the store may also hold
-    # records from earlier runs, e.g. previously verified winners).
-    e2e = np.asarray([svc.store.get_arch(setting, g.fingerprint()).e2e_s
+    # records from earlier runs, e.g. previously verified fronts).
+    e2e = np.asarray([svc.store.get_arch(SETTING, g.fingerprint()).e2e_s
                       for g in train_graphs])
-    budget_s = float(np.median(e2e) * 0.8)
-    cfg = NASSpaceConfig(resolution=32)
-    candidates = [sample_architecture(seed, cfg) for seed in range(1000, 1200)]
-    reports = svc.predict_batch(candidates)
-    best, best_q, best_pred = None, -1e30, None
-    for cand, rep in zip(candidates, reports):
-        q = proxy_quality(cand)
-        if rep.e2e_s <= budget_s and q > best_q:
-            best, best_q, best_pred = cand, q, rep.e2e_s
-    assert best is not None, "no candidate met the budget"
-    print(f"budget {1e3 * budget_s:.2f} ms → winner {best.name} "
-          f"(predicted {1e3 * best_pred:.2f} ms, quality {best_q:.2f})")
+    budget = DeviceBudget(SETTING, float(np.median(e2e) * 0.8))
+    print(f"latency budget: {1e3 * budget.budget_s:.2f} ms")
 
-    print("== verify the winner by measurement (persisted to the store) ==")
-    rec = svc.session.profile_graph(best, setting)
-    err = abs(best_pred - rec.e2e_s) / rec.e2e_s
-    print(f"measured {1e3 * rec.e2e_s:.2f} ms — prediction error {100 * err:.1f}%")
+    print("\n== single-device search (~200 candidates, zero measurements) ==")
+    cfg = SearchConfig(population_size=32, generations=8, children_per_gen=24,
+                       seed=0, quality="flops", front_capacity=6)
+    report = SearchEngine(svc, [budget], cfg).run()
+    assert report.front, "no candidate met the budget"
+    print(f"scored {report.candidates_scored} candidates with "
+          f"{report.predict_batch_calls} predict_batch calls "
+          f"({report.wall_time_s:.1f}s); front:")
+    show_front(report, [budget.key])
+
+    print("\n== verify the front by measurement (persisted to the store) ==")
+    ver = report.verify(svc.session, SETTING)
+    for row in ver["rows"]:
+        err = abs(row["predicted_s"] - row["measured_s"]) / row["measured_s"]
+        print(f"  {row['digest']}  predicted {1e3 * row['predicted_s']:6.2f} ms"
+              f"  measured {1e3 * row['measured_s']:6.2f} ms  ({100 * err:.1f}%)")
+    print(f"front MAPE vs measurement: {100 * ver['mape']:.1f}% "
+          f"({ver['n_verified']} measurements for "
+          f"{report.candidates_scored} candidates explored)")
+
+    print("\n== adapt a second device with a 32-measurement budget ==")
+    device = SyntheticDevice("edge2", seed=21, noise=0.1, base_scale=2.5)
+    target_sess = ReplayProfileSession(svc.store, device, SETTING)
+    result = TransferEngine(SETTING, SECOND, family="gbdt", seed=0).adapt(
+        svc.store, svc.hub, target_sess, 32)
+    print(f"registered {SECOND.device!r} bank from "
+          f"{result.n_measurements} measurements")
+
+    print("\n== two-device constrained search ==")
+    # The second device is ~2.5× slower; give it a proportionally looser
+    # budget so the joint constraint bites without being impossible.
+    budgets = [budget, DeviceBudget(SECOND, budget.budget_s * 3.0)]
+    report2 = SearchEngine(svc, budgets,
+                           SearchConfig(population_size=32, generations=8,
+                                        children_per_gen=24, seed=1,
+                                        quality="flops",
+                                        front_capacity=6)).run()
+    assert report2.front, "no candidate met both device budgets"
+    print(f"scored {report2.candidates_scored} candidates "
+          f"({report2.predict_batch_calls} predict_batch calls — "
+          f"one per device per generation); front:")
+    show_front(report2, [b.key for b in budgets])
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ from typing import Callable, Dict, List, Tuple
 import numpy as np
 
 from repro.core.ir import OpGraph, OpNode
-from repro.utils.lru import LRUCache
+from repro.utils.lru import SegmentedLRUCache
 
 FeatureFn = Callable[[OpGraph, OpNode], Tuple[List[str], List[float]]]
 
@@ -515,16 +515,25 @@ class GraphFeatures:
         return self.names[self.slots[k][0]]
 
 
-_GRAPH_FEATURE_CACHE = LRUCache(maxsize=256)
+# Segmented (scan-resistant) cache: search loops featurizing thousands
+# of one-shot candidate fingerprints only recycle the probation segment;
+# profiled/training graphs are pinned into the protected segment
+# (``pin=True`` below) and survive the scan.
+_GRAPH_FEATURE_CACHE = SegmentedLRUCache(probation=256, protected=256)
 
 
-def graph_features(graph: OpGraph, *, cache: bool = True) -> GraphFeatures:
+def graph_features(graph: OpGraph, *, cache: bool = True,
+                   pin: bool = False) -> GraphFeatures:
     """`GraphFeatures` for ``graph``, LRU-cached by graph fingerprint.
 
     NAS re-scoring, bank training, and profiling all hit this cache, so
     a known graph is featurized exactly once per process (per cache
     window).  ``fingerprint()`` carries its own staleness guard, so
     builder-style mutations after caching get a fresh entry.
+
+    ``pin=True`` marks the graph long-lived (profiling and training
+    paths): its entry goes to the cache's protected segment, where
+    population-scale scoring of one-shot candidates cannot evict it.
     """
     if not cache:
         return GraphFeatures.from_graph(graph)
@@ -532,13 +541,14 @@ def graph_features(graph: OpGraph, *, cache: bool = True) -> GraphFeatures:
     gf = _GRAPH_FEATURE_CACHE.get(fp)
     if gf is None or gf.num_nodes != len(graph.nodes):
         gf = GraphFeatures.from_graph(graph)
-        _GRAPH_FEATURE_CACHE[fp] = gf
+        _GRAPH_FEATURE_CACHE.put(fp, gf, protect=pin)
+    elif pin:
+        _GRAPH_FEATURE_CACHE.put(fp, gf, protect=True)   # upgrade in place
     return gf
 
 
 def graph_feature_cache_info() -> Dict[str, int]:
-    return {"size": len(_GRAPH_FEATURE_CACHE),
-            "capacity": _GRAPH_FEATURE_CACHE.maxsize}
+    return dict(_GRAPH_FEATURE_CACHE.info())
 
 
 def clear_graph_feature_cache() -> None:

@@ -22,12 +22,21 @@ the paper measures on phones at 224×224 — we default to 32×32).
 Stride-2 convolutions emit an explicit `pad` op + VALID conv with
 probability 0.5, mirroring TFLite graph exports (and populating the
 paper's `Padding` op category).
+
+The space is *parameterized*: every random decision lives in a
+`BlockGene`, and an architecture is a `Genotype` (one gene per block +
+head width).  `sample_genotype` draws a genotype (the paper's uniform
+distribution); `decode_genotype` deterministically builds its `OpGraph`.
+Search layers (`repro.search`) mutate and recombine genotypes directly
+— `sample_architecture` is just sample + decode and produces, seed for
+seed, the graphs the sample-only path always produced.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import List, Optional, Tuple
+import hashlib
+import json
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -35,6 +44,12 @@ from repro.core.ir import OpGraph
 
 EW_KINDS = ("abs", "square", "sqrt", "exp", "neg")
 ACTS = ("relu", "relu6", "hswish")
+BLOCK_KINDS = ("conv", "dwsep", "bottleneck", "pool", "split")
+# Paper Fig. 12 channel ranges: C1..C5, C6..C9, and the head C10.
+# Shared with `repro.search.encoding` so sampling and mutation draw
+# from the same distribution.
+STAGE_CHANNEL_RANGES = ((8, 80), (80, 400))
+HEAD_CHANNEL_RANGE = (1200, 1800)
 
 
 @dataclass
@@ -56,11 +71,159 @@ def _rint(rng: np.random.Generator, lo: int, hi: int, scale: float) -> int:
     return max(4, int(round(v * scale)))
 
 
-def _pad_then_valid(g: OpGraph, x: int, k: int, rng: np.random.Generator,
-                    cfg: NASSpaceConfig) -> Tuple[int, str]:
-    """Maybe emit explicit pad (stride-2 TFLite style); return (tensor, padding)."""
-    if rng.random() >= cfg.explicit_pad_prob:
-        return x, "SAME"
+# ---------------------------------------------------------------------------
+# Genotype: one gene per block (the unit search mutates)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BlockGene:
+    """Every decision one block embodies.
+
+    Fields beyond a kind's needs stay at their defaults (canonical form —
+    `repro.search.encoding.repair` enforces it after mutation), so equal
+    decoded graphs come from equal genes.  ``n_splits == 0`` on a
+    ``split`` gene means the conv fallback (input channels had no
+    divisor in {2,3,4}); the conv fields then apply.
+    """
+
+    kind: str                         # one of BLOCK_KINDS
+    out_c: int
+    kernel: int = 3                   # conv/dwsep/bottleneck (pool: {1,3})
+    groups: int = 1                   # conv only
+    act: str = "relu"                 # conv only
+    explicit_pad: bool = False        # conv at stride 2 only
+    expansion: int = 1                # bottleneck only
+    use_se: bool = False              # bottleneck only
+    pool_kind: str = "pool_avg"       # pool only
+    n_splits: int = 0                 # split only (0 = conv fallback)
+    ew_kinds: Tuple[str, ...] = ()    # split only, one per branch
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "kind": self.kind, "out_c": self.out_c, "kernel": self.kernel,
+            "groups": self.groups, "act": self.act,
+            "explicit_pad": self.explicit_pad, "expansion": self.expansion,
+            "use_se": self.use_se, "pool_kind": self.pool_kind,
+            "n_splits": self.n_splits, "ew_kinds": list(self.ew_kinds),
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "BlockGene":
+        d = dict(d)
+        d["ew_kinds"] = tuple(d.get("ew_kinds", ()))
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class Genotype:
+    """One architecture of the space: block genes + head width."""
+
+    blocks: Tuple[BlockGene, ...]
+    head_c: int
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"blocks": [b.to_json() for b in self.blocks],
+                "head_c": self.head_c}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "Genotype":
+        return cls(tuple(BlockGene.from_json(b) for b in d["blocks"]),
+                   int(d["head_c"]))
+
+    def digest(self) -> str:
+        """Content hash — the identity search loops key populations on."""
+        blob = json.dumps(self.to_json(), sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+    def replace_block(self, i: int, gene: BlockGene) -> "Genotype":
+        blocks = list(self.blocks)
+        blocks[i] = gene
+        return replace(self, blocks=tuple(blocks))
+
+
+# ---------------------------------------------------------------------------
+# Sampling (paper's uniform draw — rng order matches the historical
+# sample-only implementation, so seeds reproduce the same graphs)
+# ---------------------------------------------------------------------------
+
+def _sample_conv_gene(rng: np.random.Generator, in_c: int, out_c: int,
+                      stride: int, cfg: NASSpaceConfig) -> BlockGene:
+    k = int(rng.choice([3, 5, 7]))
+    groups = 1
+    if rng.random() < 0.3:  # "optionally grouped"
+        cand = [4 * i for i in range(1, 17)
+                if in_c % (4 * i) == 0 and out_c % (4 * i) == 0]
+        if cand:
+            groups = int(rng.choice(cand))
+    explicit_pad = bool(stride == 2 and rng.random() < cfg.explicit_pad_prob)
+    act = str(rng.choice(ACTS))
+    return BlockGene("conv", out_c, kernel=k, groups=groups, act=act,
+                     explicit_pad=explicit_pad)
+
+
+def _sample_gene(rng: np.random.Generator, kind: str, in_c: int, out_c: int,
+                 stride: int, cfg: NASSpaceConfig) -> BlockGene:
+    if kind == "conv":
+        return _sample_conv_gene(rng, in_c, out_c, stride, cfg)
+    if kind == "dwsep":
+        return BlockGene("dwsep", out_c, kernel=int(rng.choice([3, 5, 7])))
+    if kind == "bottleneck":
+        return BlockGene(
+            "bottleneck", out_c, kernel=int(rng.choice([3, 5, 7])),
+            expansion=int(rng.choice([1, 3, 6])),
+            use_se=bool(rng.random() < 0.5))
+    if kind == "pool":
+        return BlockGene(
+            "pool", out_c, kernel=int(rng.choice([1, 3])),
+            pool_kind="pool_avg" if rng.random() < 0.5 else "pool_max")
+    if kind == "split":
+        divisors = [n for n in (2, 3, 4) if in_c % n == 0]
+        if not divisors:
+            # Conv fallback (stride already spent on the pre-pool): keep
+            # the conv fields on the split gene, n_splits = 0.
+            cg = _sample_conv_gene(rng, in_c, out_c, 1, cfg)
+            return replace(cg, kind="split", n_splits=0)
+        n = int(rng.choice(divisors))
+        kinds = tuple(str(rng.choice(EW_KINDS)) for _ in range(n))
+        return BlockGene("split", out_c, n_splits=n, ew_kinds=kinds)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def genotype_from_rng(rng: np.random.Generator,
+                      cfg: Optional[NASSpaceConfig] = None) -> Genotype:
+    """Draw one genotype from the paper's distribution (Fig. 12)."""
+    cfg = cfg or NASSpaceConfig()
+    # Per paper Fig. 12: C1..C5 ~ U[8,80], C6..C9 ~ U[80,400].
+    chans = [
+        _rint(rng, *STAGE_CHANNEL_RANGES[0], cfg.channel_scale)
+        for _ in range(5)
+    ] + [
+        _rint(rng, *STAGE_CHANNEL_RANGES[1], cfg.channel_scale)
+        for _ in range(4)
+    ]
+    genes: List[BlockGene] = []
+    in_c = 3
+    for i in range(cfg.num_blocks):
+        stride = 2 if (i + 1) in cfg.halve_after else 1
+        kind = BLOCK_KINDS[int(rng.integers(0, len(BLOCK_KINDS)))]
+        genes.append(_sample_gene(rng, kind, in_c, chans[i], stride, cfg))
+        in_c = chans[i]
+    head_c = _rint(rng, *HEAD_CHANNEL_RANGE, cfg.channel_scale)
+    return Genotype(tuple(genes), head_c)
+
+
+def sample_genotype(seed: int,
+                    cfg: Optional[NASSpaceConfig] = None) -> Genotype:
+    """Genotype of the architecture `sample_architecture(seed)` builds."""
+    return genotype_from_rng(np.random.default_rng(seed), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decoding (pure: genotype → OpGraph; invalid genes repair deterministically)
+# ---------------------------------------------------------------------------
+
+def _emit_pad(g: OpGraph, x: int, k: int) -> Tuple[int, str]:
+    """Explicit pad (stride-2 TFLite style); return (tensor, padding)."""
     shape = g.tensor(x).shape
     h, w = shape[1], shape[2]
     pad_total = max(k - 2, 0)
@@ -77,56 +240,60 @@ def _pad_then_valid(g: OpGraph, x: int, k: int, rng: np.random.Generator,
     return y, "VALID"
 
 
-def _conv_block(g: OpGraph, x: int, out_c: int, stride: int,
-                rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+def _valid_groups(groups: int, in_c: int, out_c: int) -> int:
+    """Group count if it divides both channel counts, else 1 (gene repair
+    for crossover/mutation products; sampled genes always pass)."""
+    if groups > 1 and in_c % groups == 0 and out_c % groups == 0:
+        return groups
+    return 1
+
+
+def _build_conv(g: OpGraph, x: int, gene: BlockGene, stride: int,
+                cfg: NASSpaceConfig) -> int:
     shape = g.tensor(x).shape
     in_c = shape[-1]
-    k = int(rng.choice([3, 5, 7]))
-    groups = 1
-    if rng.random() < 0.3:  # "optionally grouped"
-        cand = [4 * i for i in range(1, 17) if in_c % (4 * i) == 0 and out_c % (4 * i) == 0]
-        if cand:
-            groups = int(rng.choice(cand))
+    k = gene.kernel
+    groups = _valid_groups(gene.groups, in_c, gene.out_c)
     padding = "SAME"
-    if stride == 2:
-        x, padding = _pad_then_valid(g, x, k, rng, cfg)
+    if stride == 2 and gene.explicit_pad:
+        x, padding = _emit_pad(g, x, k)
         shape = g.tensor(x).shape
     oh = _cdiv(shape[1], stride) if padding != "VALID" else max(1, (shape[1] - k) // stride + 1)
     ow = _cdiv(shape[2], stride) if padding != "VALID" else max(1, (shape[2] - k) // stride + 1)
     op = "grouped_conv2d" if groups > 1 else "conv2d"
-    act = str(rng.choice(ACTS))
     # relu/relu6 are converter-fused into the conv (TFLite behaviour);
     # composite activations (hswish) stay separate graph nodes and are
     # candidates for Alg. C.1 fusion on GPU-class devices.
-    conv_act = act if act in ("relu", "relu6") else None
+    conv_act = gene.act if gene.act in ("relu", "relu6") else None
     (y,) = g.add_op(
-        op, [x], [(shape[0], oh, ow, out_c)],
+        op, [x], [(shape[0], oh, ow, gene.out_c)],
         {"kernel_h": k, "kernel_w": k, "stride": stride, "groups": groups,
          "act": conv_act, "padding": padding},
     )
     if conv_act is None:
-        (y,) = g.add_op("activation", [y], [(shape[0], oh, ow, out_c)], {"act": act})
+        (y,) = g.add_op("activation", [y], [(shape[0], oh, ow, gene.out_c)],
+                        {"act": gene.act})
     return y
 
 
-def _dwsep_block(g: OpGraph, x: int, out_c: int, stride: int,
-                 rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+def _build_dwsep(g: OpGraph, x: int, gene: BlockGene, stride: int,
+                 cfg: NASSpaceConfig) -> int:
     shape = g.tensor(x).shape
     in_c = shape[-1]
-    k = int(rng.choice([3, 5, 7]))
+    k = gene.kernel
     oh, ow = _cdiv(shape[1], stride), _cdiv(shape[2], stride)
     (y,) = g.add_op(
         "dwconv2d", [x], [(shape[0], oh, ow, in_c)],
         {"kernel_h": k, "kernel_w": k, "stride": stride, "act": "relu"},
     )
     (y,) = g.add_op(
-        "conv2d", [y], [(shape[0], oh, ow, out_c)],
+        "conv2d", [y], [(shape[0], oh, ow, gene.out_c)],
         {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1, "act": "relu"},
     )
     return y
 
 
-def _se_module(g: OpGraph, x: int, rng: np.random.Generator) -> int:
+def _se_module(g: OpGraph, x: int) -> int:
     """Squeeze-and-Excite: mean → FC(C/4) → relu → FC(C) → sigmoid → mul."""
     shape = g.tensor(x).shape
     c = shape[-1]
@@ -141,16 +308,14 @@ def _se_module(g: OpGraph, x: int, rng: np.random.Generator) -> int:
     return s
 
 
-def _bottleneck_block(g: OpGraph, x: int, out_c: int, stride: int,
-                      rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+def _build_bottleneck(g: OpGraph, x: int, gene: BlockGene, stride: int,
+                      cfg: NASSpaceConfig) -> int:
     shape = g.tensor(x).shape
     in_c = shape[-1]
-    k = int(rng.choice([3, 5, 7]))
-    expand = int(rng.choice([1, 3, 6]))
-    use_se = bool(rng.random() < 0.5)
-    mid_c = in_c * expand
+    k = gene.kernel
+    mid_c = in_c * gene.expansion
     h = x
-    if expand != 1:
+    if gene.expansion != 1:
         (h,) = g.add_op(
             "conv2d", [h], [(shape[0], shape[1], shape[2], mid_c)],
             {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1, "act": "relu6"},
@@ -160,39 +325,39 @@ def _bottleneck_block(g: OpGraph, x: int, out_c: int, stride: int,
         "dwconv2d", [h], [(shape[0], oh, ow, mid_c)],
         {"kernel_h": k, "kernel_w": k, "stride": stride, "act": "relu6"},
     )
-    if use_se:
-        h = _se_module(g, h, rng)
+    if gene.use_se:
+        h = _se_module(g, h)
     (h,) = g.add_op(
-        "conv2d", [h], [(shape[0], oh, ow, out_c)],
+        "conv2d", [h], [(shape[0], oh, ow, gene.out_c)],
         {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1},
     )
-    if stride == 1 and out_c == in_c:
-        (h,) = g.add_op("elementwise", [h, x], [(shape[0], oh, ow, out_c)],
+    if stride == 1 and gene.out_c == in_c:
+        (h,) = g.add_op("elementwise", [h, x], [(shape[0], oh, ow, gene.out_c)],
                         {"ew_kind": "add"})
     return h
 
 
-def _pool_block(g: OpGraph, x: int, out_c: int, stride: int,
-                rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+def _build_pool(g: OpGraph, x: int, gene: BlockGene, stride: int,
+                cfg: NASSpaceConfig) -> int:
     shape = g.tensor(x).shape
     in_c = shape[-1]
-    k = int(rng.choice([1, 3]))
-    kind = "pool_avg" if rng.random() < 0.5 else "pool_max"
+    kind = gene.pool_kind if gene.pool_kind in ("pool_avg", "pool_max") else "pool_avg"
+    k = gene.kernel if gene.kernel in (1, 3) else 3
     oh, ow = _cdiv(shape[1], stride), _cdiv(shape[2], stride)
     (y,) = g.add_op(
         kind, [x], [(shape[0], oh, ow, in_c)],
         {"kernel_h": k, "kernel_w": k, "stride": stride},
     )
-    if out_c != in_c:  # 1×1 projection to realize the sampled Cᵢ
+    if gene.out_c != in_c:  # 1×1 projection to realize the sampled Cᵢ
         (y,) = g.add_op(
-            "conv2d", [y], [(shape[0], oh, ow, out_c)],
+            "conv2d", [y], [(shape[0], oh, ow, gene.out_c)],
             {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1},
         )
     return y
 
 
-def _split_block(g: OpGraph, x: int, out_c: int, stride: int,
-                 rng: np.random.Generator, cfg: NASSpaceConfig) -> int:
+def _build_split(g: OpGraph, x: int, gene: BlockGene, stride: int,
+                 cfg: NASSpaceConfig) -> int:
     shape = g.tensor(x).shape
     in_c = shape[-1]
     if stride == 2:  # halve spatially first (split has no stride)
@@ -201,64 +366,76 @@ def _split_block(g: OpGraph, x: int, out_c: int, stride: int,
             {"kernel_h": 3, "kernel_w": 3, "stride": 2},
         )
         shape = g.tensor(x).shape
-    divisors = [n for n in (2, 3, 4) if in_c % n == 0]
-    if not divisors:
-        return _conv_block(g, x, out_c, 1, rng, cfg)
-    n = int(rng.choice(divisors))
+    n = gene.n_splits
+    if n < 2 or n > 4 or in_c % n != 0:
+        return _build_conv(g, x, gene, 1, cfg)   # conv fallback
     part_c = in_c // n
     parts = g.add_op(
         "split", [x], [(shape[0], shape[1], shape[2], part_c)] * n,
         {"num_splits": n, "axis": -1},
     )
+    kinds = gene.ew_kinds or (EW_KINDS[0],)
     outs = []
-    for pt in parts:
-        kind = str(rng.choice(EW_KINDS))
+    for j, pt in enumerate(parts):
         (o,) = g.add_op("elementwise", [pt],
                         [(shape[0], shape[1], shape[2], part_c)],
-                        {"ew_kind": kind})
+                        {"ew_kind": kinds[j % len(kinds)]})
         outs.append(o)
     (y,) = g.add_op("concat", outs, [(shape[0], shape[1], shape[2], in_c)],
                     {"axis": -1})
-    if out_c != in_c:
+    if gene.out_c != in_c:
         (y,) = g.add_op(
-            "conv2d", [y], [(shape[0], shape[1], shape[2], out_c)],
+            "conv2d", [y], [(shape[0], shape[1], shape[2], gene.out_c)],
             {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1},
         )
     return y
 
 
-_BLOCKS = (_conv_block, _dwsep_block, _bottleneck_block, _pool_block, _split_block)
+_BUILDERS = {
+    "conv": _build_conv,
+    "dwsep": _build_dwsep,
+    "bottleneck": _build_bottleneck,
+    "pool": _build_pool,
+    "split": _build_split,
+}
 
 
-def sample_architecture(seed: int, cfg: Optional[NASSpaceConfig] = None) -> OpGraph:
-    """Sample one synthetic NA (deterministic in `seed`)."""
+def decode_genotype(gt: Genotype, cfg: Optional[NASSpaceConfig] = None,
+                    name: Optional[str] = None) -> OpGraph:
+    """Build the genotype's `OpGraph` (deterministic; mildly invalid genes
+    — stale group counts, impossible splits — repair to their documented
+    fallbacks rather than raising, so search operators stay total)."""
     cfg = cfg or NASSpaceConfig()
-    rng = np.random.default_rng(seed)
-    g = OpGraph(f"nas_{seed}")
+    g = OpGraph(name or f"nas_g{gt.digest()}")
     x = g.add_input((1, cfg.resolution, cfg.resolution, 3))
-    # Per paper Fig. 12: C1..C5 ~ U[8,80], C6..C9 ~ U[80,400].
-    chans = [
-        _rint(rng, 8, 80, cfg.channel_scale) for _ in range(5)
-    ] + [
-        _rint(rng, 80, 400, cfg.channel_scale) for _ in range(4)
-    ]
-    for i in range(cfg.num_blocks):
+    for i, gene in enumerate(gt.blocks):
         stride = 2 if (i + 1) in cfg.halve_after else 1
-        block = _BLOCKS[int(rng.integers(0, len(_BLOCKS)))]
-        x = block(g, x, chans[i], stride, rng, cfg)
+        builder = _BUILDERS.get(gene.kind)
+        if builder is None:
+            raise ValueError(f"unknown block kind {gene.kind!r}")
+        x = builder(g, x, gene, stride, cfg)
     # Head: 1×1 conv to C10, global mean, FC to `classes`.
-    c10 = _rint(rng, 1200, 1800, cfg.channel_scale)
     shape = g.tensor(x).shape
     (x,) = g.add_op(
-        "conv2d", [x], [(shape[0], shape[1], shape[2], c10)],
+        "conv2d", [x], [(shape[0], shape[1], shape[2], gt.head_c)],
         {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1, "act": "relu"},
     )
-    (x,) = g.add_op("mean", [x], [(shape[0], c10)],
+    (x,) = g.add_op("mean", [x], [(shape[0], gt.head_c)],
                     {"kernel_h": shape[1], "kernel_w": shape[2]})
     (x,) = g.add_op("fully_connected", [x], [(shape[0], cfg.classes)], {})
     g.mark_output(x)
     g.validate()
     return g
+
+
+# ---------------------------------------------------------------------------
+# Sample-only convenience (sampling + decode)
+# ---------------------------------------------------------------------------
+
+def sample_architecture(seed: int, cfg: Optional[NASSpaceConfig] = None) -> OpGraph:
+    """Sample one synthetic NA (deterministic in `seed`)."""
+    cfg = cfg or NASSpaceConfig()
+    return decode_genotype(sample_genotype(seed, cfg), cfg, name=f"nas_{seed}")
 
 
 def sample_dataset(n: int, cfg: Optional[NASSpaceConfig] = None,

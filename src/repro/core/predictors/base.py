@@ -96,6 +96,15 @@ class Predictor:
         """
         return self
 
+    def tree_model(self) -> Optional["Predictor"]:
+        """The fitted flattened-tree model serving this predictor, or
+        None for non-tree families.  Wrappers (calibrated transfer
+        predictors) delegate to the model they wrap, so serving layers
+        can steer the traversal backend without knowing wrapper
+        internals.
+        """
+        return self if getattr(self, "trees", None) else None
+
     def mape(self, x: np.ndarray, y: np.ndarray) -> float:
         y = np.asarray(y, dtype=np.float64)
         pred = self.predict(x)

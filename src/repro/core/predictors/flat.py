@@ -38,6 +38,20 @@ import numpy as np
 AUTO_JAX_MIN_SLOTS = 1 << 16
 
 
+def resolve_backend(backend: str, n_slots: int) -> str:
+    """Concrete backend for a query of ``n_slots`` row×tree slots.
+
+    The one place the "auto" heuristic lives: `FlatEnsemble.predict_trees`
+    and batch-serving layers that want to *record* which backend a call
+    will take (`LatencyService.stats`) resolve through it, so the
+    threshold cannot drift between decision and bookkeeping.
+    """
+    if backend == "auto":
+        return ("jax" if n_slots >= AUTO_JAX_MIN_SLOTS and _jax_available()
+                else "numpy")
+    return backend
+
+
 class FlatEnsemble:
     """Struct-of-arrays form of a bank of regression trees."""
 
@@ -127,8 +141,7 @@ class FlatEnsemble:
         if x.ndim != 2:
             raise ValueError(f"X must be 2-D, got {x.shape}")
         if backend == "auto":
-            backend = ("jax" if x.shape[0] * self.n_trees >= AUTO_JAX_MIN_SLOTS
-                       and _jax_available() else "numpy")
+            backend = resolve_backend("auto", x.shape[0] * self.n_trees)
         if backend == "jax":
             from repro.kernels.tree_gather import predict_trees_jax
             return predict_trees_jax(self, x)

@@ -286,7 +286,10 @@ class ProfileSession:
         # Featurize the exec graph once (cached by fingerprint); each
         # node's vector is shared between the store write in measure_op
         # and the OpRecord here (they used to be computed twice).
-        gf = graph_features(g)
+        # Profiled graphs are long-lived (training suites, verification
+        # targets) — pin them so population-scale candidate scoring
+        # can't evict their entries.
+        gf = graph_features(g, pin=True)
         ops: List[OpRecord] = []
         for k, node in enumerate(g.nodes):
             names, vals = gf.node_names(k), gf.node_features(k)

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.composition import PredictorBank
 from repro.core.features import graph_features
+from repro.core.predictors.flat import resolve_backend
 from repro.core.fusion import fuse_graph
 from repro.core.ir import OpGraph
 from repro.core.profiler import DeviceSetting, ProfileSession
@@ -75,11 +76,21 @@ class LatencyService:
 
     def __init__(self, hub: PredictorHub, *,
                  default_setting: Optional[DeviceSetting] = None,
-                 predictor: str = "gbdt", cache_size: int = 1024):
+                 predictor: str = "gbdt", cache_size: int = 1024,
+                 inference_backend: str = "auto"):
         self.hub = hub
         self.default_setting = default_setting
         self.predictor = predictor
         self.cache_size = int(cache_size)
+        # Tree-traversal backend for batched queries: "auto" picks numpy
+        # vs the jax gather kernel per call by row×tree slot count
+        # (`repro.core.predictors.flat.resolve_backend`) — NAS
+        # population scoring crosses the threshold, per-graph queries
+        # never do.  Which backend each per-type call actually took is
+        # recorded in ``backend_runs`` (see `stats`).
+        self.inference_backend = inference_backend
+        self.backend_runs: Dict[str, int] = {}
+        self.predict_batch_calls = 0
         self._cache: "OrderedDict[Tuple[str, str, str], PredictionReport]" = OrderedDict()
         self._hub_version = hub.version
         self.cache_hits = 0
@@ -163,6 +174,7 @@ class LatencyService:
         setting = self._resolve(setting)
         family = predictor or self.predictor
         skey = setting_key(setting)
+        self.predict_batch_calls += 1
         if self._hub_version != self.hub.version:   # bank(s) retrained
             self._cache.clear()
             self._hub_version = self.hub.version
@@ -213,7 +225,7 @@ class LatencyService:
             if model is None:
                 preds = np.zeros(len(x))
             else:
-                preds = model.predict(x)              # already clamped ≥ 0
+                preds = self._run_model(model, x)     # already clamped ≥ 0
             for (j, k), p in zip(slots[op_type], preds):
                 per_op[j][k] = (op_type, float(p))
 
@@ -229,6 +241,50 @@ class LatencyService:
             self._insert((fp, skey, family), report)
             out[i] = report
         return out  # type: ignore[return-value]
+
+    def predict_multi(self, graphs: Sequence[OpGraph],
+                      settings: Sequence[DeviceSetting],
+                      predictor: Optional[str] = None
+                      ) -> Dict[str, List[PredictionReport]]:
+        """One batched query per device setting over the same graphs.
+
+        The multi-device NAS constraint check: each setting resolves to
+        its own bank (transfer-registered target devices included) and
+        costs exactly one `predict_batch` call; featurization is shared
+        across settings through the fingerprint cache.  Keys are the
+        settings' canonical `setting_key` strings.
+        """
+        out: Dict[str, List[PredictionReport]] = {}
+        for s in settings:
+            out[setting_key(s)] = self.predict_batch(graphs, s, predictor)
+        return out
+
+    # -- model dispatch ------------------------------------------------------
+    def _run_model(self, model, x: np.ndarray) -> np.ndarray:
+        """One per-op-type predictor call, with the backend heuristic.
+
+        Tree-ensemble models (or calibrated wrappers around them) run
+        under this service's ``inference_backend`` policy; the resolved
+        backend is tallied in ``backend_runs`` so benchmarks can assert
+        which path population-scale scoring actually took.
+        """
+        # `tree_model()` sees through wrappers (calibrated transfer
+        # predictors); non-tree families and stub models go direct.
+        flat_model = model.tree_model() if hasattr(model, "tree_model") \
+            else None
+        if flat_model is None:
+            self.backend_runs["direct"] = self.backend_runs.get("direct", 0) + 1
+            return model.predict(x)
+        backend = resolve_backend(self.inference_backend,
+                                  len(x) * flat_model.flat().n_trees)
+        prev = flat_model.inference_backend
+        flat_model.inference_backend = backend
+        try:
+            preds = model.predict(x)
+        finally:
+            flat_model.inference_backend = prev
+        self.backend_runs[backend] = self.backend_runs.get(backend, 0) + 1
+        return preds
 
     # -- introspection -------------------------------------------------------
     def available(self) -> List[Tuple[str, str]]:
@@ -247,6 +303,15 @@ class LatencyService:
     def cache_info(self) -> Dict[str, int]:
         return {"size": len(self._cache), "capacity": self.cache_size,
                 "hits": self.cache_hits, "misses": self.cache_misses}
+
+    def stats(self) -> Dict[str, Any]:
+        """Cache counters + which tree backend batched queries ran on."""
+        return {
+            **self.cache_info(),
+            "predict_batch_calls": self.predict_batch_calls,
+            "inference_backend": self.inference_backend,
+            "backend_runs": dict(self.backend_runs),
+        }
 
     def clear_cache(self) -> None:
         self._cache.clear()

@@ -1,0 +1,32 @@
+"""Hardware-aware NAS driven by the latency predictor (docs/PIPELINE.md
+§ "NAS search").
+
+The paper's motivating workload as a real search engine: an aging
+evolutionary loop over `repro.core.nas_space` genotypes whose latency
+objective is served entirely by `LatencyService.predict_batch` (one
+batched call per device setting per generation) under per-device budget
+constraints, with an incremental Pareto front, JSON checkpoint/resume,
+and measured verification of the final front:
+
+    encoding    — mutate/crossover/repair over `Genotype`s + decode
+    objectives  — quality proxies, `DeviceBudget`, `LatencyScorer`
+    pareto      — incremental non-dominated front, crowding distance
+    evolution   — `SearchEngine`, `SearchConfig`, `SearchReport`
+"""
+from repro.search.encoding import (crossover, decode, mutate,
+                                   random_genotype, repair)
+from repro.search.evolution import (GenStats, SearchConfig, SearchEngine,
+                                    SearchReport)
+from repro.search.objectives import (BalancedQuality, DeviceBudget,
+                                     FlopsQuality, LatencyScorer, QUALITIES,
+                                     graph_flops, graph_params, make_quality)
+from repro.search.pareto import (ParetoFront, crowding_distance, dominates,
+                                 nondominated_rank)
+
+__all__ = [
+    "BalancedQuality", "DeviceBudget", "FlopsQuality", "GenStats",
+    "LatencyScorer", "ParetoFront", "QUALITIES", "SearchConfig",
+    "SearchEngine", "SearchReport", "crossover", "crowding_distance",
+    "decode", "dominates", "graph_flops", "graph_params", "make_quality",
+    "mutate", "nondominated_rank", "random_genotype", "repair",
+]

@@ -210,6 +210,9 @@ class CalibratedPredictor(Predictor):
         self.base.finalize()
         return self
 
+    def tree_model(self):
+        return None if self.base is None else self.base.tree_model()
+
     # -- serialization --------------------------------------------------------
     def _config_json(self) -> Dict[str, Any]:
         return {}

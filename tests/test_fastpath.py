@@ -189,10 +189,38 @@ class TestGraphFeatures:
 
     def test_cache_bounded(self):
         clear_graph_feature_cache()
-        cap = graph_feature_cache_info()["capacity"]
+        cap = graph_feature_cache_info()["probation_capacity"]
+        # Unpinned inserts (one-shot candidates) only cycle probation.
         for i in range(cap + 5):
             graph_features(tiny_graph(ch=i + 1))
-        assert graph_feature_cache_info()["size"] == cap
+        info = graph_feature_cache_info()
+        assert info["probation"] == cap
+        assert info["protected"] == 0
+        assert info["size"] <= info["capacity"]
+
+    def test_pinned_graphs_survive_one_shot_scan(self, monkeypatch):
+        # Search-workload thrash regression: scoring thousands of
+        # one-shot candidate fingerprints must not evict the pinned
+        # (profiled/training) graphs' entries.
+        clear_graph_feature_cache()
+        train = tiny_graph(ch=3)
+        gf = graph_features(train, pin=True)
+        cap = graph_feature_cache_info()["probation_capacity"]
+        for i in range(cap + 50):                 # a full probation cycle
+            graph_features(tiny_graph(ch=i + 10))
+        calls = {"n": 0}
+        real = features_mod.featurize
+
+        def counting(graph, node):
+            calls["n"] += 1
+            return real(graph, node)
+
+        monkeypatch.setattr(features_mod, "featurize", counting)
+        assert graph_features(train) is gf        # served from protected
+        assert calls["n"] == 0
+        info = graph_feature_cache_info()
+        assert info["protected"] == 1
+        assert info["probation"] == info["probation_capacity"]
 
 
 # ---------------------------------------------------------------------------
