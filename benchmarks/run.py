@@ -22,6 +22,7 @@ BENCHES = [
     ("graph_index", "benchmarks.bench_graph_index"),          # docs/PIPELINE.md
     ("transfer", "benchmarks.bench_transfer"),                # docs/PIPELINE.md
     ("search", "benchmarks.bench_search"),                    # docs/PIPELINE.md
+    ("rpc", "benchmarks.bench_rpc"),                          # docs/PIPELINE.md
     ("multicore", "benchmarks.bench_multicore"),              # Fig. 2/3
     ("quantization", "benchmarks.bench_quantization"),        # Fig. 4/5
     ("fusion", "benchmarks.bench_fusion"),                    # Fig. 6/7

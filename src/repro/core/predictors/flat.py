@@ -30,6 +30,7 @@ enabled) and is opt-in for large batches.
 """
 from __future__ import annotations
 
+import threading
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -185,6 +186,10 @@ class FlattenedTreeModel:
         self._flat: Optional[FlatEnsemble] = None
         # Runtime knob (not serialized model state): numpy | jax | auto.
         self.inference_backend = "numpy"
+        # Serializes swap-predict-restore of the knob by batch servers
+        # (`LatencyService._run_model`): per model, so two threads
+        # serving *different* banks still predict in parallel.
+        self.backend_swap_lock = threading.Lock()
 
     def _invalidate_flat(self) -> None:
         self._flat = None

@@ -24,9 +24,18 @@ One service can serve many devices: banks registered in the hub under
 device-tagged setting keys (`repro.transfer`'s calibrated target banks)
 resolve through the same ``predict_e2e(graph, setting)`` call — the
 setting's key picks the bank, and reports/caches are keyed per device.
+
+The service is thread-safe: the report cache, hit/miss/backend
+counters, and the per-call backend swap are all guarded, so RPC server
+threads (`repro.rpc`) can hammer ``predict_e2e``/``predict_batch``
+concurrently without lost cache entries or cross-wired counters.  The
+predictor math itself runs outside the cache lock — concurrent fresh
+queries for the *same* graph may both compute, but they compute the
+same (deterministic) report, so last-write-wins insertion is benign.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -68,7 +77,22 @@ class PredictionReport:
             "e2e_s": self.e2e_s, "overhead_s": self.overhead_s,
             "num_ops": self.num_ops, "num_kernels": self.num_kernels,
             "per_op": [list(p) for p in self.per_op],
+            "from_cache": self.from_cache,
         }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "PredictionReport":
+        """Inverse of `to_json` — the RPC wire format round-trips reports
+        bit-exactly (floats survive json; see tests/test_rpc.py)."""
+        return cls(
+            graph_name=d["graph"], fingerprint=d["fp"],
+            setting=d["setting"], predictor=d["predictor"],
+            e2e_s=float(d["e2e_s"]),
+            per_op=tuple((str(t), float(v)) for t, v in d["per_op"]),
+            overhead_s=float(d["overhead_s"]),
+            num_ops=int(d["num_ops"]), num_kernels=int(d["num_kernels"]),
+            from_cache=bool(d.get("from_cache", False)),
+        )
 
 
 class LatencyService:
@@ -95,6 +119,12 @@ class LatencyService:
         self._hub_version = hub.version
         self.cache_hits = 0
         self.cache_misses = 0
+        # Guards the report cache + every counter (reentrant: _insert
+        # runs under predict_batch's critical section too).
+        self._lock = threading.RLock()
+        # Fallback for `_run_model`'s backend swap when a model predates
+        # the per-model `backend_swap_lock` (stubs, hand-built doubles).
+        self._backend_lock = threading.Lock()
         # Populated by `build`; optional otherwise.
         self.store: Optional[ProfileStore] = None
         self.session: Optional[ProfileSession] = None
@@ -174,24 +204,28 @@ class LatencyService:
         setting = self._resolve(setting)
         family = predictor or self.predictor
         skey = setting_key(setting)
-        self.predict_batch_calls += 1
-        if self._hub_version != self.hub.version:   # bank(s) retrained
-            self._cache.clear()
-            self._hub_version = self.hub.version
-
         out: List[Optional[PredictionReport]] = [None] * len(graphs)
         fresh: List[Tuple[int, str, OpGraph]] = []   # (position, fp, graph)
-        for i, g in enumerate(graphs):
-            fp = g.fingerprint()
-            ck = (fp, skey, family)
-            hit = self._cache.get(ck)
-            if hit is not None:
-                self._cache.move_to_end(ck)
-                self.cache_hits += 1
-                out[i] = replace(hit, from_cache=True)
-            else:
-                self.cache_misses += 1
-                fresh.append((i, fp, g))
+        # Fingerprinting mutates the graph's memo slot — do it outside
+        # the lock (graphs are caller-owned; the cache/counters aren't).
+        fps = [g.fingerprint() for g in graphs]
+        with self._lock:
+            self.predict_batch_calls += 1
+            if self._hub_version != self.hub.version:   # bank(s) retrained
+                self._cache.clear()
+                self._hub_version = self.hub.version
+            bank_version = self._hub_version    # the version we compute with
+            for i, g in enumerate(graphs):
+                fp = fps[i]
+                ck = (fp, skey, family)
+                hit = self._cache.get(ck)
+                if hit is not None:
+                    self._cache.move_to_end(ck)
+                    self.cache_hits += 1
+                    out[i] = replace(hit, from_cache=True)
+                else:
+                    self.cache_misses += 1
+                    fresh.append((i, fp, g))
         if not fresh:
             return out  # type: ignore[return-value]
 
@@ -238,9 +272,40 @@ class LatencyService:
                 per_op=tuple(ops), overhead_s=float(overhead),
                 num_ops=g.num_ops(), num_kernels=len(eg.nodes),
             )
-            self._insert((fp, skey, family), report)
+            with self._lock:
+                # Don't poison a cache another thread just cleared on a
+                # retrain: this report was computed against the bank
+                # version snapshotted above, so it only enters the cache
+                # while that version is still current.
+                if self._hub_version == bank_version:
+                    self._insert((fp, skey, family), report)
             out[i] = report
         return out  # type: ignore[return-value]
+
+    def cache_peek(self, graph: OpGraph,
+                   setting: Optional[DeviceSetting] = None,
+                   predictor: Optional[str] = None
+                   ) -> Optional[PredictionReport]:
+        """Cached report for one graph, or None — without computing.
+
+        The RPC batcher's admission short-circuit: a hit is answered
+        before the request ever enqueues (and counts as a cache hit); a
+        miss counts nothing here — the flush's `predict_batch` will
+        account for it exactly once.
+        """
+        setting = self._resolve(setting)
+        ck = (graph.fingerprint(), setting_key(setting),
+              predictor or self.predictor)
+        with self._lock:
+            if self._hub_version != self.hub.version:
+                self._cache.clear()
+                self._hub_version = self.hub.version
+            hit = self._cache.get(ck)
+            if hit is None:
+                return None
+            self._cache.move_to_end(ck)
+            self.cache_hits += 1
+            return replace(hit, from_cache=True)
 
     def predict_multi(self, graphs: Sequence[OpGraph],
                       settings: Sequence[DeviceSetting],
@@ -273,17 +338,28 @@ class LatencyService:
         flat_model = model.tree_model() if hasattr(model, "tree_model") \
             else None
         if flat_model is None:
-            self.backend_runs["direct"] = self.backend_runs.get("direct", 0) + 1
+            with self._lock:
+                self.backend_runs["direct"] = \
+                    self.backend_runs.get("direct", 0) + 1
             return model.predict(x)
         backend = resolve_backend(self.inference_backend,
                                   len(x) * flat_model.flat().n_trees)
-        prev = flat_model.inference_backend
-        flat_model.inference_backend = backend
-        try:
-            preds = model.predict(x)
-        finally:
-            flat_model.inference_backend = prev
-        self.backend_runs[backend] = self.backend_runs.get(backend, 0) + 1
+        # The knob is model state shared by every thread serving this
+        # bank — swap, predict, and restore as one atomic section.  The
+        # lock lives on the model (calibrated wrappers across settings
+        # can share one underlying flat model), so threads serving
+        # *different* models still predict in parallel.
+        swap_lock = getattr(flat_model, "backend_swap_lock",
+                            self._backend_lock)
+        with swap_lock:
+            prev = flat_model.inference_backend
+            flat_model.inference_backend = backend
+            try:
+                preds = model.predict(x)
+            finally:
+                flat_model.inference_backend = prev
+        with self._lock:
+            self.backend_runs[backend] = self.backend_runs.get(backend, 0) + 1
         return preds
 
     # -- introspection -------------------------------------------------------
@@ -295,23 +371,30 @@ class LatencyService:
 
     # -- cache ---------------------------------------------------------------
     def _insert(self, key: Tuple[str, str, str], report: PredictionReport) -> None:
+        # Caller holds self._lock: the insert + eviction loop must be
+        # atomic (two racing evictors can pop an already-empty head).
         self._cache[key] = report
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
 
     def cache_info(self) -> Dict[str, int]:
-        return {"size": len(self._cache), "capacity": self.cache_size,
-                "hits": self.cache_hits, "misses": self.cache_misses}
+        with self._lock:
+            return {"size": len(self._cache), "capacity": self.cache_size,
+                    "hits": self.cache_hits, "misses": self.cache_misses}
 
     def stats(self) -> Dict[str, Any]:
-        """Cache counters + which tree backend batched queries ran on."""
-        return {
-            **self.cache_info(),
-            "predict_batch_calls": self.predict_batch_calls,
-            "inference_backend": self.inference_backend,
-            "backend_runs": dict(self.backend_runs),
-        }
+        """Cache counters + which tree backend batched queries ran on
+        (one consistent snapshot — the lock is reentrant, so nesting
+        `cache_info` keeps the two views in one critical section)."""
+        with self._lock:
+            return {
+                **self.cache_info(),
+                "predict_batch_calls": self.predict_batch_calls,
+                "inference_backend": self.inference_backend,
+                "backend_runs": dict(self.backend_runs),
+            }
 
     def clear_cache(self) -> None:
-        self._cache.clear()
+        with self._lock:
+            self._cache.clear()

@@ -1,0 +1,29 @@
+"""Latency-prediction serving layer (docs/PIPELINE.md § "Serving / RPC").
+
+Fronts a `repro.pipeline.LatencyService` with a process-local RPC
+stack: many concurrent single-graph requests coalesce in a
+deterministic micro-batching queue into the batched compiled fast
+path, over a versioned JSON-lines protocol with typed error envelopes:
+
+    protocol — wire format v1: requests/responses, error codes,
+               graph/setting/report (de)serialization
+    batcher  — `MicroBatcher` + `BatchPolicy` + injectable clocks
+               (`MonotonicClock`, `ManualClock`)
+    server   — `LatencyRPCServer`: threaded TCP / stream transports,
+               search-front endpoint
+    client   — `LatencyClient`: pipelined, thread-safe, service-shaped
+"""
+from repro.rpc.batcher import (BatchPolicy, ManualClock, MicroBatcher,
+                               MonotonicClock, PendingResult)
+from repro.rpc.client import LatencyClient
+from repro.rpc.protocol import (PROTOCOL_VERSION, Request, Response, RPCError,
+                                decode_request, decode_response,
+                                encode_request, encode_response)
+from repro.rpc.server import LatencyRPCServer
+
+__all__ = [
+    "BatchPolicy", "LatencyClient", "LatencyRPCServer", "ManualClock",
+    "MicroBatcher", "MonotonicClock", "PROTOCOL_VERSION", "PendingResult",
+    "RPCError", "Request", "Response", "decode_request", "decode_response",
+    "encode_request", "encode_response",
+]

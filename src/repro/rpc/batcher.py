@@ -1,0 +1,426 @@
+"""Deterministic micro-batching queue in front of `LatencyService`.
+
+Many concurrent single-graph ``predict`` requests are worth little
+individually — each costs a full `predict_batch([g])` (per-op-type
+predictor dispatch, report assembly) — but coalesced they hit the
+compiled fast path the repo built in PR 2/4: ONE `predict_batch` per
+flush per (setting, predictor family) group, large enough under load
+to cross the jax gather backend's 2¹⁶ row×tree threshold.
+
+Coalescing policy (`BatchPolicy`):
+
+  * a group flushes when it holds ``max_batch`` requests, or when its
+    oldest request has waited ``max_wait_ticks`` clock ticks;
+  * admission control bounds total queued requests at ``max_queue`` —
+    beyond it, submits fail fast with a retryable ``overloaded`` error
+    instead of growing an unbounded backlog;
+  * requests whose report is already in the service's LRU are answered
+    at submit time (cache short-circuit) and never consume queue space;
+  * fairness across device settings: each flush round serves every due
+    group oldest-waiting-first, at most one ``max_batch`` batch per
+    group per round, so one hot device cannot starve the others.
+
+Time is injectable.  `MonotonicClock` (production) maps ticks onto
+wall-clock milliseconds; `ManualClock` (tests) only moves when
+`advance()` is called, so the flush schedule is a pure function of the
+arrival order and the tick sequence — the property suite replays
+arbitrary interleavings without ever sleeping (tests/test_rpc_properties.py).
+
+Exactly-once: every submitted request is resolved exactly once (result
+or typed error); a double resolve raises instead of silently
+overwriting, so lost/duplicated responses fail loudly in tests.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.core.ir import OpGraph
+from repro.core.profiler import DeviceSetting
+from repro.pipeline.service import PredictionReport
+from repro.pipeline.store import setting_key
+from repro.rpc.protocol import (E_INTERNAL, E_OVERLOADED, E_TIMEOUT,
+                                E_UNAVAILABLE, E_UNKNOWN_SETTING, RPCError)
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.rpc.batcher")
+
+
+# -- clocks -------------------------------------------------------------------
+
+class MonotonicClock:
+    """Wall-clock ticks (default 1 tick = 1 ms) for production serving."""
+
+    def __init__(self, tick_s: float = 1e-3):
+        self.tick_s = float(tick_s)
+        self._t0 = time.monotonic()
+
+    def now(self) -> int:
+        return int((time.monotonic() - self._t0) / self.tick_s)
+
+    def wait(self, cond: threading.Condition, ticks: Optional[int]) -> None:
+        """Block on ``cond`` for at most ``ticks`` (None = indefinitely)."""
+        cond.wait(None if ticks is None else max(ticks, 1) * self.tick_s)
+
+
+class ManualClock:
+    """Discrete injectable clock — time moves only via `advance()`.
+
+    Waiters (the batcher's flush worker) subscribe a wake callback, so
+    advancing the clock from a test thread re-evaluates deadlines
+    immediately; nothing in the system sleeps on wall time.
+    """
+
+    def __init__(self, start: int = 0):
+        self._now = int(start)
+        self._lock = threading.Lock()
+        self._listeners: List[Callable[[], None]] = []
+
+    def now(self) -> int:
+        with self._lock:
+            return self._now
+
+    def advance(self, ticks: int = 1) -> int:
+        with self._lock:
+            self._now += int(ticks)
+            now = self._now
+            listeners = list(self._listeners)
+        for fn in listeners:
+            fn()
+        return now
+
+    def subscribe(self, fn: Callable[[], None]) -> None:
+        with self._lock:
+            self._listeners.append(fn)
+
+    def wait(self, cond: threading.Condition, ticks: Optional[int]) -> None:
+        # Manual time never elapses on its own; wake-ups come from
+        # `advance()`/submit notifications.  The bounded real-time wait
+        # is a liveness backstop, not a schedule.
+        cond.wait(0.1)
+
+
+# -- request futures ----------------------------------------------------------
+
+class PendingResult:
+    """A one-shot future for a submitted request.
+
+    Resolution is exactly-once by construction: a second `_resolve` or
+    `_fail` raises `RuntimeError` — the concurrency suite leans on this
+    to detect duplicated responses rather than masking them.
+    """
+
+    __slots__ = ("_event", "_lock", "_report", "_error", "_callbacks")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._report: Optional[PredictionReport] = None
+        self._error: Optional[RPCError] = None
+        self._callbacks: List[Callable[["PendingResult"], None]] = []
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def _settle(self, report: Optional[PredictionReport],
+                error: Optional[RPCError]) -> None:
+        with self._lock:
+            if self._event.is_set():
+                raise RuntimeError("PendingResult resolved twice")
+            self._report, self._error = report, error
+            self._event.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            try:
+                fn(self)
+            except Exception:                      # pragma: no cover
+                log.exception("PendingResult callback failed")
+
+    def _resolve(self, report: PredictionReport) -> None:
+        self._settle(report, None)
+
+    def _fail(self, error: RPCError) -> None:
+        self._settle(None, error)
+
+    def add_done_callback(self, fn: Callable[["PendingResult"], None]) -> None:
+        """Run ``fn(self)`` once settled (immediately if already done)."""
+        with self._lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def error(self) -> Optional[RPCError]:
+        return self._error
+
+    def result(self, timeout: Optional[float] = None) -> PredictionReport:
+        """The report (blocking); raises the request's `RPCError` on
+        failure or a retryable ``timeout`` error if not settled in time."""
+        if not self._event.wait(timeout):
+            raise RPCError(E_TIMEOUT,
+                           f"request not answered within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        assert self._report is not None
+        return self._report
+
+
+@dataclass(frozen=True)
+class BatchPolicy:
+    """Flush/admission knobs (see module docstring)."""
+
+    max_batch: int = 32        # flush a group at this many requests
+    max_wait_ticks: int = 2    # ... or when its oldest waited this long
+    max_queue: int = 1024      # total queued requests before admission fails
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_wait_ticks < 0:
+            raise ValueError("max_wait_ticks must be >= 0")
+        if self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+
+
+@dataclass
+class _Entry:
+    seq: int
+    graph: OpGraph
+    setting: DeviceSetting
+    family: str
+    deadline: int
+    pending: PendingResult
+
+
+class MicroBatcher:
+    """Coalesces concurrent single-graph requests into batched predicts.
+
+    ``auto_start=True`` (default) runs a daemon flush worker; with
+    ``auto_start=False`` the owner drives flushing explicitly via
+    `run_pending()` / `flush_all()` — the deterministic test mode.
+    """
+
+    def __init__(self, service: Any, policy: Optional[BatchPolicy] = None, *,
+                 clock: Optional[Any] = None, auto_start: bool = True):
+        self.service = service
+        self.policy = policy or BatchPolicy()
+        self.clock = clock or MonotonicClock()
+        self._cond = threading.Condition()
+        # (setting key, family) → FIFO of entries awaiting a flush.
+        self._groups: "OrderedDict[Tuple[str, str], Deque[_Entry]]" = OrderedDict()
+        self._seq = 0
+        self._queued = 0
+        self._closed = False
+        # Counters (all mutated under _cond).
+        self.submitted = 0
+        self.answered = 0
+        self.failed = 0
+        self.rejected = 0
+        self.short_circuits = 0
+        self.batches = 0
+        self.batched_requests = 0
+        self.max_batch_observed = 0
+        if hasattr(self.clock, "subscribe"):
+            self.clock.subscribe(self._wake)
+        self._worker: Optional[threading.Thread] = None
+        if auto_start:
+            self._worker = threading.Thread(
+                target=self._run, name="rpc-batcher", daemon=True)
+            self._worker.start()
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, graph: OpGraph,
+               setting: Optional[DeviceSetting] = None,
+               predictor: Optional[str] = None) -> PendingResult:
+        """Enqueue one request; returns its future.
+
+        Raises `RPCError` synchronously for admission failures
+        (``overloaded``), unknown settings, or a closed batcher — the
+        request was never accepted, so there is nothing to await.
+        """
+        setting = setting or getattr(self.service, "default_setting", None)
+        if setting is None:
+            raise RPCError(E_UNKNOWN_SETTING,
+                           "no device setting given and the service has "
+                           "no default", retryable=False)
+        family = predictor or self.service.predictor
+        # Cache short-circuit: answered before admission, so repeats of
+        # a hot graph neither queue nor count against max_queue.
+        hit = self.service.cache_peek(graph, setting, family)
+        if hit is not None:
+            pending = PendingResult()
+            with self._cond:
+                if self._closed:
+                    raise RPCError(E_UNAVAILABLE, "batcher is closed")
+                self.submitted += 1
+                self.short_circuits += 1
+                self.answered += 1
+            pending._resolve(hit)
+            return pending
+        key = (setting_key(setting), family)
+        with self._cond:
+            if self._closed:
+                raise RPCError(E_UNAVAILABLE, "batcher is closed")
+            if self._queued >= self.policy.max_queue:
+                self.rejected += 1
+                raise RPCError(
+                    E_OVERLOADED,
+                    f"queue full ({self._queued}/{self.policy.max_queue} "
+                    f"requests pending)")
+            self._seq += 1
+            entry = _Entry(
+                seq=self._seq, graph=graph, setting=setting, family=family,
+                deadline=self.clock.now() + self.policy.max_wait_ticks,
+                pending=PendingResult())
+            self._groups.setdefault(key, deque()).append(entry)
+            self._queued += 1
+            self.submitted += 1
+            self._cond.notify_all()
+        return entry.pending
+
+    # -- flushing -------------------------------------------------------------
+    def _due_keys(self, now: int, force: bool) -> List[Tuple[str, str]]:
+        """Due groups, oldest-waiting first (deterministic fairness)."""
+        due = [(q[0].seq, k) for k, q in self._groups.items()
+               if q and (force or len(q) >= self.policy.max_batch
+                         or q[0].deadline <= now)]
+        due.sort()
+        return [k for _, k in due]
+
+    def _take_batch(self, key: Tuple[str, str]) -> List[_Entry]:
+        q = self._groups.get(key)
+        batch: List[_Entry] = []
+        while q and len(batch) < self.policy.max_batch:
+            batch.append(q.popleft())
+        if q is not None and not q:
+            del self._groups[key]
+        self._queued -= len(batch)
+        return batch
+
+    def _flush(self, batch: List[_Entry]) -> None:
+        """One `predict_batch` for one group batch; resolve positionally."""
+        graphs = [e.graph for e in batch]
+        try:
+            reports = self.service.predict_batch(
+                graphs, batch[0].setting, batch[0].family)
+            if len(reports) != len(batch):        # defensive: cross-wiring
+                raise RuntimeError(
+                    f"predict_batch returned {len(reports)} reports for "
+                    f"{len(batch)} graphs")
+        except RPCError as exc:
+            err = exc
+            reports = None
+        except KeyError as exc:
+            err = RPCError(E_UNKNOWN_SETTING, str(exc), retryable=False)
+            reports = None
+        except Exception as exc:
+            err = RPCError(E_INTERNAL, f"{type(exc).__name__}: {exc}")
+            reports = None
+        with self._cond:
+            self.batches += 1
+            self.batched_requests += len(batch)
+            self.max_batch_observed = max(self.max_batch_observed, len(batch))
+            if reports is None:
+                self.failed += len(batch)
+            else:
+                self.answered += len(batch)
+        if reports is None:
+            for e in batch:
+                e.pending._fail(err)
+        else:
+            for e, r in zip(batch, reports):
+                e.pending._resolve(r)
+
+    def run_pending(self, force: bool = False) -> int:
+        """Flush every due group (all groups if ``force``); returns the
+        number of requests answered/failed.  One batch per group per
+        round, rounds repeated until nothing is due."""
+        served = 0
+        while True:
+            with self._cond:
+                keys = self._due_keys(self.clock.now(), force)
+                batches = [self._take_batch(k) for k in keys]
+            batches = [b for b in batches if b]
+            if not batches:
+                return served
+            for b in batches:
+                self._flush(b)
+                served += len(b)
+
+    def flush_all(self) -> int:
+        """Drain everything immediately, deadlines notwithstanding."""
+        return self.run_pending(force=True)
+
+    # -- worker ---------------------------------------------------------------
+    def _wake(self) -> None:
+        with self._cond:
+            self._cond.notify_all()
+
+    def _next_deadline_ticks(self, now: int) -> Optional[int]:
+        heads = [q[0].deadline for q in self._groups.values() if q]
+        if not heads:
+            return None
+        return max(min(heads) - now, 0)
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._closed:
+                    if self._due_keys(self.clock.now(), force=False):
+                        break
+                    self.clock.wait(
+                        self._cond,
+                        self._next_deadline_ticks(self.clock.now()))
+                closed = self._closed
+            self.run_pending(force=closed)
+            if closed:
+                return
+
+    # -- lifecycle / introspection -------------------------------------------
+    def close(self) -> None:
+        """Stop accepting work, drain the queue, stop the worker."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=10)
+        else:
+            self.run_pending(force=True)
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def queued(self) -> int:
+        with self._cond:
+            return self._queued
+
+    def stats(self) -> Dict[str, Any]:
+        with self._cond:
+            return {
+                "submitted": self.submitted,
+                "answered": self.answered,
+                "failed": self.failed,
+                "rejected": self.rejected,
+                "short_circuits": self.short_circuits,
+                "batches": self.batches,
+                "batched_requests": self.batched_requests,
+                "max_batch_observed": self.max_batch_observed,
+                "avg_batch": (self.batched_requests / self.batches
+                              if self.batches else 0.0),
+                "queued": self._queued,
+                "policy": {"max_batch": self.policy.max_batch,
+                           "max_wait_ticks": self.policy.max_wait_ticks,
+                           "max_queue": self.policy.max_queue},
+            }
+
+
+__all__ = ["BatchPolicy", "ManualClock", "MicroBatcher", "MonotonicClock",
+           "PendingResult"]

@@ -1,0 +1,224 @@
+"""Pipelined JSON-lines client for the latency RPC server.
+
+One TCP connection, many in-flight requests: `send`s are cheap
+(id-tagged lines behind a write lock) and a single reader thread
+routes each response line to its waiting caller by id — so N client
+threads calling `predict` concurrently, or one thread calling
+`predict_pipelined`, land together in the server's micro-batcher and
+come back as one `predict_batch`.
+
+`predict_e2e` mirrors `LatencyService.predict_e2e`'s signature and
+returns real `PredictionReport`s, so the client drops into anything
+built against the service — `ServeEngine(latency_service=client, ...)`
+gets its decode-step estimate over the wire unchanged.
+"""
+from __future__ import annotations
+
+import itertools
+import socket
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.ir import OpGraph
+from repro.core.profiler import DeviceSetting
+from repro.pipeline.service import PredictionReport
+from repro.rpc.protocol import (E_TIMEOUT, E_UNAVAILABLE, Request, Response,
+                                RPCError, decode_response, encode_request,
+                                report_from_json, setting_to_json)
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.rpc.client")
+
+
+class _Slot:
+    __slots__ = ("event", "response")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.response: Optional[Response] = None
+
+
+class LatencyClient:
+    """Thread-safe RPC client (see module docstring)."""
+
+    def __init__(self, host: str, port: int, *,
+                 timeout: float = 30.0, connect_timeout: float = 5.0):
+        self.timeout = float(timeout)
+        self._sock = socket.create_connection((host, port),
+                                              timeout=connect_timeout)
+        self._sock.settimeout(None)
+        self._rfile = self._sock.makefile("rb")
+        self._wfile = self._sock.makefile("wb")
+        self._wlock = threading.Lock()
+        self._pending: Dict[str, _Slot] = {}
+        self._plock = threading.Lock()
+        self._ids = itertools.count(1)
+        self._closed = False
+        self._reader = threading.Thread(target=self._read_loop,
+                                        name="rpc-client-reader", daemon=True)
+        self._reader.start()
+
+    # -- plumbing -------------------------------------------------------------
+    def _read_loop(self) -> None:
+        try:
+            for raw in self._rfile:
+                line = raw.decode().strip()
+                if not line:
+                    continue
+                try:
+                    resp = decode_response(line)
+                except RPCError:
+                    log.warning("undecodable response line dropped: %.120s",
+                                line)
+                    continue
+                if resp.id is None:
+                    continue
+                with self._plock:
+                    slot = self._pending.pop(resp.id, None)
+                if slot is not None:
+                    slot.response = resp
+                    slot.event.set()
+        except (OSError, ValueError):
+            pass
+        finally:
+            # The connection is unusable: refuse new sends immediately
+            # (instead of letting them hang to their full timeout) and
+            # fail everything in flight.
+            self._closed = True
+            self._fail_all(RPCError(E_UNAVAILABLE, "connection closed"))
+
+    def _fail_all(self, err: RPCError) -> None:
+        with self._plock:
+            slots, self._pending = list(self._pending.values()), {}
+        for slot in slots:
+            slot.response = Response(id=None, ok=False, error=err)
+            slot.event.set()
+
+    def send(self, method: str, params: Optional[Dict[str, Any]] = None
+             ) -> _Slot:
+        """Fire one request; returns the slot to `wait` on (pipelining)."""
+        if self._closed:
+            raise RPCError(E_UNAVAILABLE, "client is closed")
+        rid = f"c{next(self._ids)}"
+        slot = _Slot()
+        with self._plock:
+            self._pending[rid] = slot
+        line = encode_request(Request(id=rid, method=method,
+                                      params=params or {}))
+        try:
+            with self._wlock:
+                self._wfile.write((line + "\n").encode())
+                self._wfile.flush()
+        except (OSError, ValueError):
+            with self._plock:
+                self._pending.pop(rid, None)
+            raise RPCError(E_UNAVAILABLE, "connection closed") from None
+        return slot
+
+    def wait(self, slot: _Slot,
+             timeout: Optional[float] = None) -> Dict[str, Any]:
+        """Block for a slot's result payload; raises the typed error the
+        server sent (or ``timeout``)."""
+        if not slot.event.wait(self.timeout if timeout is None else timeout):
+            raise RPCError(E_TIMEOUT, "no response from server")
+        resp = slot.response
+        assert resp is not None
+        if not resp.ok:
+            raise resp.error if resp.error is not None else \
+                RPCError(E_UNAVAILABLE, "empty error envelope")
+        return resp.result or {}
+
+    def call(self, method: str, params: Optional[Dict[str, Any]] = None,
+             timeout: Optional[float] = None) -> Dict[str, Any]:
+        return self.wait(self.send(method, params), timeout)
+
+    # -- the service-shaped API ----------------------------------------------
+    @staticmethod
+    def _predict_params(graph: OpGraph,
+                        setting: Optional[DeviceSetting],
+                        predictor: Optional[str]) -> Dict[str, Any]:
+        params: Dict[str, Any] = {"graph": graph.to_json()}
+        if setting is not None:
+            params["setting"] = setting_to_json(setting)
+        if predictor is not None:
+            params["predictor"] = predictor
+        return params
+
+    def predict_e2e(self, graph: OpGraph,
+                    setting: Optional[DeviceSetting] = None,
+                    predictor: Optional[str] = None) -> PredictionReport:
+        """One graph's predicted end-to-end latency, over the wire."""
+        result = self.call("predict",
+                           self._predict_params(graph, setting, predictor))
+        return report_from_json(result["report"])
+
+    predict = predict_e2e
+
+    def predict_pipelined(self, graphs: Sequence[OpGraph],
+                          setting: Optional[DeviceSetting] = None,
+                          predictor: Optional[str] = None
+                          ) -> List[PredictionReport]:
+        """Fire one ``predict`` per graph without waiting between sends,
+        then collect — from the server's viewpoint these arrive together
+        and coalesce into micro-batches."""
+        slots = [self.send("predict",
+                           self._predict_params(g, setting, predictor))
+                 for g in graphs]
+        return [report_from_json(self.wait(s)["report"]) for s in slots]
+
+    def predict_multi(self, graphs: Sequence[OpGraph],
+                      settings: Sequence[DeviceSetting],
+                      predictor: Optional[str] = None
+                      ) -> Dict[str, List[PredictionReport]]:
+        """Mirror of `LatencyService.predict_multi` as ONE request (the
+        payload is already a batch; it bypasses the micro-batcher)."""
+        params: Dict[str, Any] = {
+            "graphs": [g.to_json() for g in graphs],
+            "settings": [setting_to_json(s) for s in settings],
+        }
+        if predictor is not None:
+            params["predictor"] = predictor
+        result = self.call("predict_multi", params)
+        return {k: [report_from_json(r) for r in v]
+                for k, v in result["reports"].items()}
+
+    def available(self) -> List[List[str]]:
+        return self.call("available")["banks"]
+
+    def stats(self) -> Dict[str, Any]:
+        return self.call("stats")
+
+    def search_front(self, *, setting: Any = None,
+                     budget_s: Optional[float] = None,
+                     limit: Optional[int] = None) -> Dict[str, Any]:
+        params: Dict[str, Any] = {}
+        if setting is not None:
+            params["setting"] = (setting_to_json(setting)
+                                 if isinstance(setting, DeviceSetting)
+                                 else setting)
+        if budget_s is not None:
+            params["budget_s"] = float(budget_s)
+        if limit is not None:
+            params["limit"] = int(limit)
+        return self.call("search_front", params)
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "LatencyClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = ["LatencyClient"]

@@ -1,0 +1,426 @@
+"""Threaded JSON-lines RPC server fronting a `LatencyService`.
+
+Transport-agnostic dispatch over line-oriented streams: the TCP
+listener (`start`) wraps each accepted socket in the same
+`serve_stream` loop that also serves stdio-style file pairs, so tests,
+pipes, and sockets all exercise one code path.
+
+Requests on a connection are *pipelined*: the reader thread decodes
+each line and dispatches it immediately — ``predict`` submits to the
+`MicroBatcher` and attaches a completion callback that writes the
+response when the flush resolves it, so many in-flight predicts from
+one client coalesce into one `predict_batch` (responses may return
+out of order; clients correlate by ``id``).  Cheap methods
+(``available``, ``stats``, ``search_front``, and the already-batched
+``predict_multi``) are answered inline on the reader thread.
+
+A search front (`repro.search` `SearchReport` or a `SearchEngine`
+checkpoint file) can be registered and queried over the same wire —
+"which architectures meet budget X on device Y" served from the same
+process that predicts latencies.
+"""
+from __future__ import annotations
+
+import json
+import queue
+import socket
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.rpc.batcher import BatchPolicy, MicroBatcher, PendingResult
+from repro.rpc.protocol import (E_BAD_REQUEST, E_INTERNAL, E_UNAVAILABLE,
+                                E_UNKNOWN_METHOD, E_UNKNOWN_SETTING,
+                                PROTOCOL_VERSION, METHODS, Request, Response,
+                                RPCError, decode_request, encode_response,
+                                graph_from_wire, request_id_of,
+                                setting_from_wire, setting_key_of)
+from repro.pipeline.store import setting_key
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.rpc.server")
+
+
+def _front_from_state(state: Dict[str, Any]) -> Dict[str, Any]:
+    """Normalize a search artifact into ``{budgets, members}``.
+
+    Accepts either a `SearchReport.to_json()` payload or a
+    `SearchEngine.save()` checkpoint (detected by its ``memo``/
+    ``genotypes`` state); both reduce to the served shape: one entry
+    per front member with digest, genotype, quality, and per-setting
+    predicted latencies.
+    """
+    if "memo" in state and "genotypes" in state:      # engine checkpoint
+        members = []
+        for digest, _obj, _payload in state.get("front", {}).get("members", []):
+            e = state["memo"].get(digest)
+            if e is None:
+                continue
+            members.append({
+                "digest": digest,
+                "genotype": state["genotypes"].get(digest),
+                "quality": float(e["quality"]),
+                "latencies": {k: float(v) for k, v in e["lat"].items()},
+            })
+        return {"budgets": state.get("budgets", []), "members": members}
+    if "front" in state:                               # SearchReport shape
+        members = [{
+            "digest": m["digest"], "genotype": m["genotype"],
+            "quality": float(m["quality"]),
+            "latencies": {k: float(v) for k, v in m["latencies"].items()},
+        } for m in state["front"]]
+        return {"budgets": state.get("budgets", []), "members": members}
+    raise ValueError("unrecognized search artifact (expected a SearchReport "
+                     "JSON or a SearchEngine checkpoint)")
+
+
+class LatencyRPCServer:
+    """Serves one `LatencyService` over the v1 JSONL protocol."""
+
+    def __init__(self, service: Any, *,
+                 policy: Optional[BatchPolicy] = None,
+                 clock: Optional[Any] = None,
+                 batcher: Optional[MicroBatcher] = None,
+                 auto_start_batcher: bool = True,
+                 search_report: Any = None,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.service = service
+        self.batcher = batcher or MicroBatcher(
+            service, policy, clock=clock, auto_start=auto_start_batcher)
+        self._owns_batcher = batcher is None
+        self.host, self.port = host, int(port)
+        self._sock: Optional[socket.socket] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._conns: List[socket.socket] = []
+        self._lock = threading.Lock()
+        self._stopped = False
+        self.requests = 0
+        self.errors = 0
+        self.connections = 0
+        self._front: Optional[Dict[str, Any]] = None
+        if search_report is not None:
+            self.register_search_report(search_report)
+
+    # -- search-front endpoint ------------------------------------------------
+    def register_search_report(self, report: Any) -> None:
+        """Serve front queries from a `SearchReport`, its JSON dict, or a
+        checkpoint/report file path."""
+        if hasattr(report, "to_json"):
+            state = report.to_json()
+        elif isinstance(report, str):
+            with open(report) as f:
+                state = json.load(f)
+        elif isinstance(report, dict):
+            state = report
+        else:
+            raise TypeError(f"cannot register {type(report).__name__} "
+                            f"as a search report")
+        self._front = _front_from_state(state)
+
+    # -- dispatch -------------------------------------------------------------
+    def dispatch(self, req: Request,
+                 respond: Callable[[Response], None]) -> None:
+        """Route one decoded request; ``respond`` is called exactly once
+        (possibly later, from a batcher flush, for ``predict``)."""
+        try:
+            if req.method == "predict":
+                self._predict_async(req, respond)
+                return
+            handler = {
+                "predict_multi": self._predict_multi,
+                "available": self._available,
+                "stats": self._stats,
+                "search_front": self._search_front,
+            }.get(req.method)
+            if handler is None:
+                known = ", ".join(METHODS)
+                raise RPCError(E_UNKNOWN_METHOD,
+                               f"unknown method {req.method!r} "
+                               f"(known: {known})", retryable=False)
+            respond(Response(id=req.id, ok=True, result=handler(req.params)))
+        except RPCError as exc:
+            self._count_error()
+            respond(Response(id=req.id, ok=False, error=exc))
+        except Exception as exc:                       # pragma: no cover
+            log.exception("request %s failed", req.id)
+            self._count_error()
+            respond(Response(id=req.id, ok=False,
+                             error=RPCError(E_INTERNAL,
+                                            f"{type(exc).__name__}: {exc}")))
+
+    def _count_error(self) -> None:
+        with self._lock:
+            self.errors += 1
+
+    def _predict_async(self, req: Request,
+                       respond: Callable[[Response], None]) -> None:
+        params = req.params
+        if "graph" not in params:
+            raise RPCError(E_BAD_REQUEST, "predict needs params.graph")
+        graph = graph_from_wire(params["graph"])
+        setting = (setting_from_wire(params["setting"])
+                   if params.get("setting") is not None else None)
+        predictor = params.get("predictor")
+        pending = self.batcher.submit(graph, setting, predictor)
+        rid = req.id
+
+        def on_done(p: PendingResult) -> None:
+            err = p.error()
+            if err is not None:
+                self._count_error()
+                respond(Response(id=rid, ok=False, error=err))
+            else:
+                respond(Response(id=rid, ok=True,
+                                 result={"report": p.result(0).to_json()}))
+
+        pending.add_done_callback(on_done)
+
+    def _predict_multi(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        graphs = params.get("graphs")
+        settings = params.get("settings")
+        if not isinstance(graphs, list) or not graphs:
+            raise RPCError(E_BAD_REQUEST,
+                           "predict_multi needs a non-empty params.graphs")
+        if not isinstance(settings, list) or not settings:
+            raise RPCError(E_BAD_REQUEST,
+                           "predict_multi needs a non-empty params.settings")
+        gs = [graph_from_wire(g) for g in graphs]
+        ss = [setting_from_wire(s) for s in settings]
+        try:
+            multi = self.service.predict_multi(gs, ss,
+                                               params.get("predictor"))
+        except KeyError as exc:
+            raise RPCError(E_UNKNOWN_SETTING, str(exc),
+                           retryable=False) from None
+        return {"reports": {k: [r.to_json() for r in v]
+                            for k, v in multi.items()}}
+
+    def _available(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        return {"banks": [list(b) for b in self.service.available()]}
+
+    def _stats(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        with self._lock:
+            server = {"requests": self.requests, "errors": self.errors,
+                      "connections": self.connections,
+                      "protocol_version": PROTOCOL_VERSION}
+        return {"server": server, "batcher": self.batcher.stats(),
+                "service": self.service.stats()}
+
+    def _search_front(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        if self._front is None:
+            raise RPCError(E_UNAVAILABLE, "no search report registered "
+                           "on this server")
+        members = self._front["members"]
+        skey = None
+        if params.get("setting") is not None:
+            skey = setting_key_of(params["setting"])
+        elif self._front["budgets"]:
+            b = self._front["budgets"][0]["setting"]
+            skey = setting_key(setting_from_wire(b))
+        elif members:
+            skey = sorted(members[0]["latencies"])[0]
+        if skey is None:
+            raise RPCError(E_UNAVAILABLE, "search front is empty")
+        if members and not any(skey in m["latencies"] for m in members):
+            known = sorted({k for m in members for k in m["latencies"]})
+            raise RPCError(E_UNKNOWN_SETTING,
+                           f"setting {skey!r} was not among the searched "
+                           f"devices {known}", retryable=False)
+        budget_s = params.get("budget_s")
+        if budget_s is not None and not isinstance(budget_s, (int, float)):
+            raise RPCError(E_BAD_REQUEST, "budget_s must be a number")
+        hits = [m for m in members
+                if skey in m["latencies"]
+                and (budget_s is None or m["latencies"][skey] <= budget_s)]
+        hits.sort(key=lambda m: (-m["quality"], m["digest"]))
+        limit = params.get("limit")
+        total = len(hits)
+        if limit is not None:
+            if not isinstance(limit, int) or limit < 0:
+                raise RPCError(E_BAD_REQUEST,
+                               "limit must be a non-negative integer")
+            hits = hits[:limit]
+        return {"setting": skey, "total": total, "members": hits}
+
+    # -- line/stream transports ----------------------------------------------
+    def handle_line(self, line: str,
+                    respond: Optional[Callable[[str], None]] = None,
+                    timeout: Optional[float] = 30.0) -> Optional[str]:
+        """Process one request line.
+
+        With ``respond`` (pipelined transports), the encoded response
+        line is delivered through it — possibly from another thread —
+        and None is returned.  Without it, blocks up to ``timeout`` and
+        returns the encoded response line (the simple sync entry point).
+        """
+        with self._lock:
+            self.requests += 1
+        try:
+            req = decode_request(line)
+        except RPCError as exc:
+            self._count_error()
+            out = encode_response(
+                Response(id=request_id_of(line), ok=False, error=exc))
+            if respond is not None:
+                respond(out)
+                return None
+            return out
+        if respond is not None:
+            self.dispatch(req, lambda r: respond(encode_response(r)))
+            return None
+        done = threading.Event()
+        slot: List[Response] = []
+
+        def collect(r: Response) -> None:
+            slot.append(r)
+            done.set()
+
+        self.dispatch(req, collect)
+        if not done.wait(timeout):
+            self._count_error()
+            return encode_response(Response(
+                id=req.id, ok=False,
+                error=RPCError(E_UNAVAILABLE,
+                               f"no response within {timeout}s")))
+        return encode_response(slot[0])
+
+    def serve_stream(self, rfile: Any, wfile: Any,
+                     drain_timeout: float = 10.0) -> None:
+        """Serve a line-oriented stream pair until EOF (stdio mode, and
+        the per-connection loop of the TCP listener).
+
+        Responses are written by a dedicated per-connection writer
+        thread fed through a bounded non-blocking queue, so a slow or
+        stalled peer can never block the batcher's flush worker (which
+        delivers predict responses through `respond`) — a peer that
+        stops reading fills its queue and gets dropped instead of
+        head-of-line-blocking every other connection.  On EOF, in-flight
+        requests get ``drain_timeout`` to settle before the writer is
+        torn down.
+        """
+        out_q: "queue.Queue[Optional[str]]" = queue.Queue(maxsize=4096)
+        dead = threading.Event()            # peer unusable: drop output
+        olock = threading.Lock()
+        idle = threading.Condition(olock)
+        outstanding = [0]
+
+        def writer() -> None:
+            while True:
+                line = out_q.get()
+                if line is None:
+                    return
+                data = line + "\n"
+                try:
+                    try:
+                        wfile.write(data)
+                    except TypeError:          # binary stream wants bytes
+                        wfile.write(data.encode())
+                    wfile.flush()
+                except (OSError, ValueError):
+                    dead.set()          # keep consuming; writes become drops
+
+        wt = threading.Thread(target=writer, name="rpc-writer", daemon=True)
+        wt.start()
+
+        def respond(line: str) -> None:
+            with olock:
+                outstanding[0] -= 1
+                idle.notify_all()
+            if dead.is_set():
+                return
+            try:
+                out_q.put_nowait(line)
+            except queue.Full:          # stalled peer: drop, don't block
+                dead.set()
+
+        try:
+            for raw in rfile:
+                line = raw.decode() if isinstance(raw, bytes) else raw
+                if not line.strip():
+                    continue
+                with olock:
+                    outstanding[0] += 1
+                self.handle_line(line, respond=respond)
+        finally:
+            with idle:
+                idle.wait_for(lambda: outstanding[0] <= 0,
+                              timeout=drain_timeout)
+            try:
+                out_q.put(None, timeout=drain_timeout)
+            except queue.Full:          # writer stuck on a dead socket
+                pass
+            wt.join(timeout=drain_timeout)
+
+    # -- TCP listener ---------------------------------------------------------
+    def start(self) -> Tuple[str, int]:
+        """Bind + listen + accept in the background; returns (host, port)."""
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind((self.host, self.port))
+        sock.listen(64)
+        self.port = sock.getsockname()[1]
+        self._sock = sock
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="rpc-accept", daemon=True)
+        self._accept_thread.start()
+        log.info("latency RPC server listening on %s:%d", self.host, self.port)
+        return self.host, self.port
+
+    def _accept_loop(self) -> None:
+        assert self._sock is not None
+        while not self._stopped:
+            try:
+                conn, _addr = self._sock.accept()
+            except OSError:
+                return                                 # listener closed
+            with self._lock:
+                self.connections += 1
+                self._conns.append(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name="rpc-conn", daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            rfile = conn.makefile("rb")
+            wfile = conn.makefile("wb")
+            self.serve_stream(rfile, wfile)
+        except (OSError, ValueError):
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+            with self._lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+
+    def stop(self) -> None:
+        """Close the listener and every connection; drain the batcher."""
+        self._stopped = True
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+        with self._lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        if self._owns_batcher:
+            self.batcher.close()
+
+    def __enter__(self) -> "LatencyRPCServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+__all__ = ["LatencyRPCServer"]

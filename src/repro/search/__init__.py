@@ -15,8 +15,8 @@ and measured verification of the final front:
 """
 from repro.search.encoding import (crossover, decode, mutate,
                                    random_genotype, repair)
-from repro.search.evolution import (GenStats, SearchConfig, SearchEngine,
-                                    SearchReport)
+from repro.search.evolution import (FrontMember, GenStats, SearchConfig,
+                                    SearchEngine, SearchReport)
 from repro.search.objectives import (BalancedQuality, DeviceBudget,
                                      FlopsQuality, LatencyScorer, QUALITIES,
                                      graph_flops, graph_params, make_quality)
@@ -24,7 +24,8 @@ from repro.search.pareto import (ParetoFront, crowding_distance, dominates,
                                  nondominated_rank)
 
 __all__ = [
-    "BalancedQuality", "DeviceBudget", "FlopsQuality", "GenStats",
+    "BalancedQuality", "DeviceBudget", "FlopsQuality", "FrontMember",
+    "GenStats",
     "LatencyScorer", "ParetoFront", "QUALITIES", "SearchConfig",
     "SearchEngine", "SearchReport", "crossover", "crowding_distance",
     "decode", "dominates", "graph_flops", "graph_params", "make_quality",

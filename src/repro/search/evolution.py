@@ -132,6 +132,13 @@ class FrontMember:
                 "quality": self.quality, "latencies": self.latencies,
                 "objectives": self.objectives}
 
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "FrontMember":
+        return cls(digest=d["digest"], genotype=d["genotype"],
+                   quality=float(d["quality"]),
+                   latencies={k: float(v) for k, v in d["latencies"].items()},
+                   objectives=[float(v) for v in d["objectives"]])
+
 
 @dataclass
 class SearchReport:
@@ -156,6 +163,22 @@ class SearchReport:
             "stats": [s.to_json() for s in self.stats],
             "wall_time_s": self.wall_time_s,
         }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "SearchReport":
+        """Inverse of `to_json` — lets a serving process (the RPC
+        search-front endpoint) load a persisted report without a
+        service or engine."""
+        return cls(
+            config=dict(d["config"]),
+            budgets=[dict(b) for b in d["budgets"]],
+            generations=int(d["generations"]),
+            candidates_scored=int(d["candidates_scored"]),
+            predict_batch_calls=int(d["predict_batch_calls"]),
+            front=[FrontMember.from_json(m) for m in d.get("front", [])],
+            stats=[GenStats.from_json(s) for s in d.get("stats", [])],
+            wall_time_s=float(d.get("wall_time_s", 0.0)),
+        )
 
     def front_json(self) -> str:
         """Canonical front serialization (invocation-equality checks)."""

@@ -14,6 +14,12 @@ estimates — the paper's NAS-time use case transplanted to serving-time
 admission control (predict, don't measure).  `stats()` reports the
 predicted-vs-measured step latency so the prediction quality is
 observable in production.
+
+``latency_service`` is duck-typed on ``predict_e2e``: an in-process
+`LatencyService`, a `repro.rpc.LatencyClient` talking to a remote
+prediction server, or anything returning a `PredictionReport` (or its
+`to_json` dict — raw protocol payloads are normalized) all serve the
+decode-step estimate through the same front-end.
 """
 from __future__ import annotations
 
@@ -57,15 +63,28 @@ class ServeEngine:
         self._steps = 0
         self._step_time_s = 0.0
         # Optional latency prediction: an OpGraph of one decode step plus
-        # a trained LatencyService give an a-priori per-step estimate.
+        # a trained LatencyService (or an RPC client fronting one) give
+        # an a-priori per-step estimate.
         self.step_report = None
         self.predicted_step_s: Optional[float] = None
+        self.prediction_source: Optional[str] = None
         if latency_service is not None and step_graph is not None:
-            self.step_report = latency_service.predict_e2e(
-                step_graph, latency_setting)
+            self.step_report = self._as_report(
+                latency_service.predict_e2e(step_graph, latency_setting))
             self.predicted_step_s = self.step_report.e2e_s
-            log.info("predicted decode-step latency: %.3f ms (%d kernels)",
-                     1e3 * self.predicted_step_s, self.step_report.num_kernels)
+            self.prediction_source = type(latency_service).__name__
+            log.info("predicted decode-step latency: %.3f ms (%d kernels, "
+                     "via %s)", 1e3 * self.predicted_step_s,
+                     self.step_report.num_kernels, self.prediction_source)
+
+    @staticmethod
+    def _as_report(report):
+        """Normalize a prediction to `PredictionReport` — wire payloads
+        (`to_json` dicts) and in-process reports are interchangeable."""
+        if isinstance(report, dict):
+            from repro.pipeline.service import PredictionReport
+            return PredictionReport.from_json(report)
+        return report
 
     def estimate_request_s(self, prompt_len: int, max_new_tokens: int
                            ) -> Optional[float]:
@@ -76,10 +95,14 @@ class ServeEngine:
 
     def stats(self) -> Dict[str, Any]:
         measured = self._step_time_s / self._steps if self._steps else None
+        ratio = (measured / self.predicted_step_s
+                 if measured and self.predicted_step_s else None)
         return {
             "steps": self._steps,
             "measured_step_s": measured,
             "predicted_step_s": self.predicted_step_s,
+            "measured_over_predicted": ratio,
+            "prediction_source": self.prediction_source,
         }
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:

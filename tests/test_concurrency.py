@@ -1,0 +1,368 @@
+"""Thread-safety of the serving stack under concurrent load.
+
+N threads hammer the `MicroBatcher` and `LatencyService` directly and
+over the socket, asserting the exactly-once contract end to end: no
+request is lost (every future settles), none is duplicated
+(`PendingResult` raises on double-resolution), and none is cross-wired
+(every report's fingerprint matches the graph that asked for it, and
+its value is bit-identical to an isolated single-threaded prediction).
+Cache and `stats()` counters must stay consistent under races —
+hits + misses always equals the number of graph queries answered.
+
+The quick variants run everywhere; the `slow`-marked stress loops run
+`RPC_STRESS_ITERS` iterations (default 100 — full depth locally; CI
+sets a reduced count, see .github/workflows/ci.yml).
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import synthetic_graphs
+from repro.core.nas_space import NASSpaceConfig, sample_architecture
+from repro.core.profiler import DeviceSetting
+from repro.pipeline import LatencyService, PredictorHub, ProfileStore
+from repro.rpc.batcher import (BatchPolicy, ManualClock, MicroBatcher,
+                               MonotonicClock)
+from repro.rpc.client import LatencyClient
+from repro.rpc.server import LatencyRPCServer
+from repro.transfer import CostModelProfileSession
+from repro.utils.lru import LRUCache, SegmentedLRUCache
+
+SOURCE = DeviceSetting("cpu_f32", "float32", "op_by_op")
+SPACE = NASSpaceConfig(resolution=16)
+
+# Full depth (the acceptance bar) locally; CI reduces via env.
+STRESS_ITERS = int(os.environ.get("RPC_STRESS_ITERS", "100"))
+
+
+@pytest.fixture(scope="module")
+def served():
+    store = ProfileStore()
+    session = CostModelProfileSession(store=store, seed=3)
+    for g in synthetic_graphs(8, resolution=16):
+        session.profile_graph(g, SOURCE)
+    hub = PredictorHub()
+    hub.train(store, SOURCE, "gbdt", hparams={"n_stages": 20}, min_samples=3)
+    svc = LatencyService(hub, default_setting=SOURCE, predictor="gbdt")
+    return {"hub": hub, "service": svc}
+
+
+@pytest.fixture(scope="module")
+def pool(served):
+    """48 distinct candidate graphs + single-threaded reference values
+    (computed on a *separate* service over the same hub, so the hammered
+    service's cache state never feeds the expectation)."""
+    graphs = [sample_architecture(s, SPACE) for s in range(500, 548)]
+    ref_svc = LatencyService(served["hub"], default_setting=SOURCE,
+                             predictor="gbdt")
+    ref = {g.fingerprint(): ref_svc.predict_e2e(g).e2e_s for g in graphs}
+    return {"graphs": graphs, "ref": ref}
+
+
+def hammer(n_threads, fn):
+    """Run ``fn(thread_idx)`` on N threads; re-raise the first failure."""
+    errors = []
+
+    def wrap(i):
+        try:
+            fn(i)
+        except BaseException as exc:   # noqa: BLE001 — surface everything
+            errors.append(exc)
+
+    threads = [threading.Thread(target=wrap, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "hammer thread hung"
+    if errors:
+        raise errors[0]
+
+
+# ---------------------------------------------------------------------------
+# Batcher under concurrent submits (live worker, real clock)
+# ---------------------------------------------------------------------------
+
+class TestBatcherConcurrency:
+    N_THREADS = 8
+    PER_THREAD = 12
+
+    def run_round(self, service, pool, *, policy=None):
+        service.clear_cache()
+        batcher = MicroBatcher(
+            service, policy or BatchPolicy(max_batch=16, max_wait_ticks=2,
+                                           max_queue=4096),
+            clock=MonotonicClock(tick_s=1e-3))
+        graphs, ref = pool["graphs"], pool["ref"]
+        results = [[] for _ in range(self.N_THREADS)]
+
+        def worker(i):
+            # Overlapping slices: every graph is requested by >1 thread,
+            # so cross-wired responses cannot cancel out.
+            mine = [graphs[(i * 7 + k) % len(graphs)]
+                    for k in range(self.PER_THREAD)]
+            futs = [(g, batcher.submit(g)) for g in mine]
+            for g, f in futs:
+                results[i].append((g, f.result(30)))
+
+        hammer(self.N_THREADS, worker)
+        batcher.close()
+        return batcher, results
+
+    def check_round(self, pool, batcher, results):
+        total = self.N_THREADS * self.PER_THREAD
+        st = batcher.stats()
+        assert st["submitted"] == total
+        assert st["answered"] == total          # nothing lost
+        assert st["failed"] == st["rejected"] == 0
+        assert st["queued"] == 0
+        assert st["batched_requests"] + st["short_circuits"] == total
+        for per_thread in results:
+            for g, rep in per_thread:
+                assert rep.fingerprint == g.fingerprint()   # not cross-wired
+                assert rep.e2e_s == pool["ref"][g.fingerprint()]  # bit-equal
+
+    def test_hammer_exactly_once(self, served, pool):
+        batcher, results = self.run_round(served["service"], pool)
+        self.check_round(pool, batcher, results)
+        # Counter consistency on the service side: every answered
+        # request was accounted exactly once as a hit or a miss.
+        st = served["service"].stats()
+        assert st["hits"] + st["misses"] >= self.N_THREADS * self.PER_THREAD
+
+    def test_tiny_batches_and_queue_pressure(self, served, pool):
+        """max_batch=1 (pure unbatched path) still exactly-once."""
+        batcher, results = self.run_round(
+            served["service"], pool,
+            policy=BatchPolicy(max_batch=1, max_wait_ticks=0,
+                               max_queue=4096))
+        self.check_round(pool, batcher, results)
+
+    @pytest.mark.slow
+    def test_stress_iterations(self, served, pool):
+        """The acceptance bar: STRESS_ITERS rounds, zero lost /
+        duplicated / cross-wired responses."""
+        for it in range(STRESS_ITERS):
+            policy = BatchPolicy(max_batch=4 + (it % 13),
+                                 max_wait_ticks=it % 3,
+                                 max_queue=4096)
+            batcher, results = self.run_round(served["service"], pool,
+                                              policy=policy)
+            self.check_round(pool, batcher, results)
+
+
+# ---------------------------------------------------------------------------
+# LatencyService hammered directly (no batcher)
+# ---------------------------------------------------------------------------
+
+class TestServiceConcurrency:
+    def test_predict_e2e_and_batch_mixed(self, served, pool):
+        svc = served["service"]
+        svc.clear_cache()
+        graphs, ref = pool["graphs"], pool["ref"]
+        counted = [0] * 8
+
+        def worker(i):
+            if i % 2 == 0:
+                for k in range(6):
+                    g = graphs[(i * 11 + k) % len(graphs)]
+                    rep = svc.predict_e2e(g)
+                    assert rep.fingerprint == g.fingerprint()
+                    assert rep.e2e_s == ref[g.fingerprint()]
+                    counted[i] += 1
+            else:
+                batch = [graphs[(i * 5 + k) % len(graphs)] for k in range(9)]
+                reps = svc.predict_batch(batch)
+                assert [r.fingerprint for r in reps] == \
+                    [g.fingerprint() for g in batch]
+                assert [r.e2e_s for r in reps] == \
+                    [ref[g.fingerprint()] for g in batch]
+                counted[i] += len(batch)
+
+        before = svc.stats()
+        hammer(8, worker)
+        after = svc.stats()
+        queries = sum(counted)
+        assert (after["hits"] - before["hits"]) + \
+            (after["misses"] - before["misses"]) == queries
+        assert after["size"] <= after["capacity"]
+
+    def test_stats_snapshot_while_serving(self, served, pool):
+        svc = served["service"]
+        svc.clear_cache()
+        stop = threading.Event()
+        graphs = pool["graphs"]
+
+        def reader(i):
+            while not stop.is_set():
+                st = svc.stats()
+                assert st["hits"] >= 0 and st["misses"] >= 0
+                assert st["size"] <= st["capacity"]
+                info = svc.cache_info()
+                assert info["size"] <= info["capacity"]
+
+        def writer(i):
+            try:
+                for k in range(40):
+                    svc.predict_e2e(graphs[(i + k) % len(graphs)])
+            finally:
+                stop.set()
+
+        hammer(4, lambda i: writer(i) if i < 2 else reader(i))
+
+    def test_cache_peek_semantics(self, served, pool):
+        svc = served["service"]
+        svc.clear_cache()
+        g = pool["graphs"][0]
+        before = svc.stats()
+        assert svc.cache_peek(g) is None
+        mid = svc.stats()
+        assert (mid["hits"], mid["misses"]) == \
+            (before["hits"], before["misses"])    # peek-miss counts nothing
+        direct = svc.predict_e2e(g)
+        hit = svc.cache_peek(g)
+        assert hit is not None and hit.from_cache
+        assert hit.e2e_s == direct.e2e_s
+        assert svc.stats()["hits"] == mid["hits"] + 1
+
+    @pytest.mark.slow
+    def test_small_cache_eviction_races(self, served, pool):
+        """A 8-entry cache under 8 threads: constant eviction pressure on
+        `_insert` must never corrupt the LRU or produce wrong values."""
+        svc = LatencyService(served["hub"], default_setting=SOURCE,
+                             predictor="gbdt", cache_size=8)
+        graphs, ref = pool["graphs"], pool["ref"]
+        iters = max(STRESS_ITERS // 4, 5)
+
+        def worker(i):
+            for k in range(iters):
+                g = graphs[(i * 13 + k) % len(graphs)]
+                rep = svc.predict_e2e(g)
+                assert rep.fingerprint == g.fingerprint()
+                assert rep.e2e_s == ref[g.fingerprint()]
+
+        hammer(8, worker)
+        st = svc.stats()
+        assert st["size"] <= 8
+        assert st["hits"] + st["misses"] == 8 * iters
+
+
+# ---------------------------------------------------------------------------
+# The LRU primitives themselves (the bugs this suite exposed live here)
+# ---------------------------------------------------------------------------
+
+class TestLRUThreadSafety:
+    KEYS = 128
+
+    def test_lru_cache_hammer(self):
+        cache = LRUCache(maxsize=32)
+
+        def worker(i):
+            for k in range(600):
+                key = (i * 31 + k) % self.KEYS
+                got = cache.get(key)
+                if got is not None:
+                    # A key must only ever map to its own value.
+                    assert got == key * 3
+                cache[key] = key * 3
+                _ = key in cache
+                if k % 64 == 0:
+                    assert len(cache) <= 32
+
+        hammer(8, worker)
+        assert len(cache) <= 32
+        for key in list(dict(cache)):
+            assert cache[key] == key * 3
+
+    def test_segmented_lru_hammer(self):
+        cache = SegmentedLRUCache(probation=24, protected=16)
+
+        def worker(i):
+            for k in range(600):
+                key = (i * 17 + k) % self.KEYS
+                got = cache.get(key)
+                if got is not None:
+                    assert got == key * 7
+                cache.put(key, key * 7, protect=(key % 5 == 0))
+                if k % 64 == 0:
+                    info = cache.info()
+                    assert info["probation"] <= info["probation_capacity"]
+                    assert info["protected"] <= info["protected_capacity"]
+
+        hammer(8, worker)
+        info = cache.info()
+        assert info["size"] <= info["capacity"]
+
+    def test_feature_cache_concurrent_featurization(self, pool):
+        """The process-wide GraphFeatures cache (SegmentedLRUCache) under
+        concurrent cached/pinned featurization of the same graphs."""
+        from repro.core.features import graph_features
+
+        graphs = pool["graphs"][:16]
+
+        def worker(i):
+            for k in range(40):
+                g = graphs[(i + k) % len(graphs)]
+                gf = graph_features(g, pin=(i % 2 == 0))
+                assert gf.fingerprint == g.fingerprint()
+                assert gf.num_nodes == len(g.nodes)
+
+        hammer(8, worker)
+
+
+# ---------------------------------------------------------------------------
+# Socket path end to end under client-side thread pressure
+# ---------------------------------------------------------------------------
+
+class TestSocketConcurrency:
+    def test_many_client_threads_one_connection(self, served, pool):
+        server = LatencyRPCServer(
+            served["service"],
+            policy=BatchPolicy(max_batch=16, max_wait_ticks=2,
+                               max_queue=4096))
+        host, port = server.start()
+        served["service"].clear_cache()
+        graphs, ref = pool["graphs"], pool["ref"]
+        try:
+            with LatencyClient(host, port, timeout=60.0) as cli:
+                def worker(i):
+                    for k in range(8):
+                        g = graphs[(i * 19 + k) % len(graphs)]
+                        rep = cli.predict_e2e(g)
+                        assert rep.fingerprint == g.fingerprint()
+                        assert rep.e2e_s == ref[g.fingerprint()]
+
+                hammer(8, worker)
+                st = cli.stats()
+                assert st["batcher"]["failed"] == 0
+                assert st["batcher"]["rejected"] == 0
+                assert st["server"]["errors"] == 0
+        finally:
+            server.stop()
+
+    @pytest.mark.slow
+    def test_socket_stress_rounds(self, served, pool):
+        server = LatencyRPCServer(
+            served["service"],
+            policy=BatchPolicy(max_batch=8, max_wait_ticks=1,
+                               max_queue=4096))
+        host, port = server.start()
+        graphs, ref = pool["graphs"], pool["ref"]
+        rounds = max(STRESS_ITERS // 5, 4)
+        try:
+            with LatencyClient(host, port, timeout=60.0) as cli:
+                for r in range(rounds):
+                    served["service"].clear_cache()
+                    reports = cli.predict_pipelined(
+                        [graphs[(r + k) % len(graphs)] for k in range(24)])
+                    for k, rep in enumerate(reports):
+                        g = graphs[(r + k) % len(graphs)]
+                        assert rep.fingerprint == g.fingerprint()
+                        assert rep.e2e_s == ref[g.fingerprint()]
+                st = cli.stats()
+                assert st["batcher"]["failed"] == 0
+        finally:
+            server.stop()

@@ -1,0 +1,607 @@
+"""`repro.rpc` — serving layer: protocol, batcher, server, client.
+
+Covers the v1 wire format (round-trips, typed error envelopes,
+unknown-version rejection, committed golden files so drift fails
+loudly), deterministic micro-batching under an injected clock
+(flush-by-size, flush-by-deadline, fairness, admission control, cache
+short-circuit), the threaded socket server + pipelined client
+end-to-end (bit-identical to in-process `predict_e2e`), the
+search-front endpoint, and `ServeEngine` taking its decode-step
+estimate over the wire.  Everything runs on the deterministic
+cost-model session; the thread-stress side lives in
+tests/test_concurrency.py.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import synthetic_graphs
+from repro.core.ir import OpGraph
+from repro.core.nas_space import NASSpaceConfig, sample_architecture
+from repro.core.profiler import DeviceSetting
+from repro.pipeline import LatencyService, PredictorHub, ProfileStore
+from repro.pipeline.service import PredictionReport
+from repro.rpc import protocol
+from repro.rpc.batcher import BatchPolicy, ManualClock, MicroBatcher
+from repro.rpc.client import LatencyClient
+from repro.rpc.protocol import (PROTOCOL_VERSION, Request, Response, RPCError,
+                                decode_request, decode_response,
+                                encode_request, encode_response)
+from repro.rpc.server import LatencyRPCServer
+from repro.search import DeviceBudget, SearchConfig, SearchEngine, SearchReport
+from repro.transfer import CostModelProfileSession
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+SOURCE = DeviceSetting("cpu_f32", "float32", "op_by_op")
+SPACE = NASSpaceConfig(resolution=16)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Cost-model-profiled store + trained hub + service."""
+    store = ProfileStore()
+    session = CostModelProfileSession(store=store, seed=3)
+    graphs = synthetic_graphs(8, resolution=16)
+    for g in graphs:
+        session.profile_graph(g, SOURCE)
+    hub = PredictorHub()
+    hub.train(store, SOURCE, "gbdt", hparams={"n_stages": 20}, min_samples=3)
+    hub.train(store, SOURCE, "lasso", min_samples=3)   # second batch group
+    svc = LatencyService(hub, default_setting=SOURCE, predictor="gbdt")
+    e2e = [store.get_arch(SOURCE, g.fingerprint()).e2e_s for g in graphs]
+    return {"store": store, "hub": hub, "service": svc,
+            "budget_s": float(np.median(e2e))}
+
+
+@pytest.fixture(scope="module")
+def live(served):
+    """A started TCP server + connected client over a generous-wait
+    batcher (50 ms) so pipelined sends reliably coalesce."""
+    server = LatencyRPCServer(
+        served["service"],
+        policy=BatchPolicy(max_batch=8, max_wait_ticks=50, max_queue=256))
+    host, port = server.start()
+    client = LatencyClient(host, port, timeout=30.0)
+    yield {"server": server, "client": client, **served}
+    client.close()
+    server.stop()
+
+
+def graphs_for(seeds):
+    return [sample_architecture(s, SPACE) for s in seeds]
+
+
+# ---------------------------------------------------------------------------
+# Protocol: round-trips, validation, error envelopes
+# ---------------------------------------------------------------------------
+
+class TestProtocol:
+    def test_request_roundtrip(self):
+        req = Request(id="r1", method="predict",
+                      params={"graph": {"x": 1}, "setting": "float32/op_by_op"})
+        again = decode_request(encode_request(req))
+        assert again == req
+
+    def test_response_roundtrip_ok_and_error(self):
+        ok = Response(id="a", ok=True, result={"banks": []})
+        again = decode_response(encode_response(ok))
+        assert again.ok and again.result == {"banks": []} and again.id == "a"
+        err = Response(id="b", ok=False,
+                       error=RPCError(protocol.E_OVERLOADED, "full"))
+        back = decode_response(encode_response(err))
+        assert not back.ok
+        assert back.error.code == protocol.E_OVERLOADED
+        assert back.error.retryable          # overloaded defaults retryable
+        assert back.error.message == "full"
+
+    def test_unknown_version_rejected(self):
+        line = json.dumps({"v": PROTOCOL_VERSION + 1, "id": "x",
+                           "method": "stats"})
+        with pytest.raises(RPCError) as ei:
+            decode_request(line)
+        assert ei.value.code == protocol.E_UNKNOWN_VERSION
+        with pytest.raises(RPCError):
+            decode_response(json.dumps({"v": 0, "id": "x", "ok": True,
+                                        "result": {}}))
+
+    @pytest.mark.parametrize("line", [
+        "{oops", "42", json.dumps({"id": "x", "method": "m"}),
+        json.dumps({"v": 1, "method": "m"}),
+        json.dumps({"v": 1, "id": True, "method": "m"}),
+        json.dumps({"v": 1, "id": "x", "method": 7}),
+        json.dumps({"v": 1, "id": "x", "method": "m", "params": "no"}),
+    ])
+    def test_bad_requests_typed(self, line):
+        with pytest.raises(RPCError) as ei:
+            decode_request(line)
+        assert ei.value.code in (protocol.E_BAD_REQUEST,
+                                 protocol.E_UNKNOWN_VERSION)
+
+    def test_setting_from_wire(self):
+        s = protocol.setting_from_wire("sim:float32/op_by_op")
+        assert (s.device, s.dtype, s.mode) == ("sim", "float32", "op_by_op")
+        assert protocol.setting_key_of("sim:float32/op_by_op") == \
+            "sim:float32/op_by_op"
+        d = protocol.setting_from_wire(
+            {"name": "x", "dtype": "int8", "mode": "op_by_op"})
+        assert protocol.setting_key_of(d) == "int8/op_by_op"
+        for bad in ("nope", "a/b/c", 7, {"dtype": "f32"}):
+            with pytest.raises(RPCError):
+                protocol.setting_from_wire(bad)
+
+    def test_graph_from_wire_validates(self):
+        g = sample_architecture(0, SPACE)
+        clone = protocol.graph_from_wire(g.to_json())
+        assert clone.fingerprint() == g.fingerprint()
+        with pytest.raises(RPCError) as ei:
+            protocol.graph_from_wire({"name": "broken"})
+        assert ei.value.code == protocol.E_BAD_GRAPH
+        with pytest.raises(RPCError):
+            protocol.graph_from_wire("not an object")
+
+    def test_report_wire_roundtrip_bit_exact(self, served):
+        rep = served["service"].predict_e2e(sample_architecture(50, SPACE))
+        clone = PredictionReport.from_json(
+            json.loads(json.dumps(rep.to_json())))
+        assert clone == rep
+
+
+# ---------------------------------------------------------------------------
+# Golden files: committed wire bytes must survive decode→encode unchanged
+# ---------------------------------------------------------------------------
+
+class TestGolden:
+    def test_requests_canonical(self):
+        with open(os.path.join(GOLDEN, "rpc_requests.jsonl")) as f:
+            lines = [l.strip() for l in f if l.strip()]
+        assert len(lines) >= 6
+        seen = set()
+        for line in lines:
+            req = decode_request(line)
+            seen.add(req.method)
+            assert encode_request(req) == line
+        assert seen == set(protocol.METHODS)
+
+    def test_responses_canonical(self):
+        with open(os.path.join(GOLDEN, "rpc_responses.jsonl")) as f:
+            lines = [l.strip() for l in f if l.strip()]
+        codes = set()
+        for line in lines:
+            resp = decode_response(line)
+            if not resp.ok:
+                codes.add(resp.error.code)
+            assert encode_response(resp) == line
+        assert {protocol.E_OVERLOADED, protocol.E_UNKNOWN_METHOD,
+                protocol.E_BAD_GRAPH} <= codes
+
+    def test_golden_graph_payload_decodes(self):
+        with open(os.path.join(GOLDEN, "rpc_requests.jsonl")) as f:
+            for line in f:
+                req = decode_request(line)
+                if "graph" in req.params:
+                    g = protocol.graph_from_wire(req.params["graph"])
+                    assert isinstance(g, OpGraph) and g.num_ops() == 1
+
+    def test_invalid_lines_rejected_with_committed_codes(self):
+        with open(os.path.join(GOLDEN, "rpc_invalid.jsonl")) as f:
+            cases = [json.loads(l) for l in f if l.strip()]
+        assert cases
+        for case in cases:
+            with pytest.raises(RPCError) as ei:
+                decode_request(case["line"])
+            assert ei.value.code == case["code"], case
+
+    def test_prediction_report_golden(self):
+        with open(os.path.join(GOLDEN, "prediction_report.json")) as f:
+            committed = json.load(f)
+        rep = PredictionReport(
+            graph_name="golden_net", fingerprint="0123456789abcdef",
+            setting="float32/op_by_op", predictor="gbdt", e2e_s=0.0125,
+            per_op=(("conv2d", 0.01),), overhead_s=0.0025,
+            num_ops=1, num_kernels=1)
+        assert rep.to_json() == committed          # wire drift fails here
+        assert PredictionReport.from_json(committed) == rep
+
+
+# ---------------------------------------------------------------------------
+# Micro-batcher: deterministic flush policy under the injected clock
+# ---------------------------------------------------------------------------
+
+class TestBatcher:
+    def mk(self, served, **kw):
+        clock = ManualClock()
+        policy = BatchPolicy(**{"max_batch": 4, "max_wait_ticks": 2,
+                                "max_queue": 64, **kw})
+        b = MicroBatcher(served["service"], policy, clock=clock,
+                         auto_start=False)
+        return b, clock
+
+    def test_flush_by_size_then_deadline(self, served):
+        served["service"].clear_cache()
+        b, clock = self.mk(served)
+        gs = graphs_for(range(100, 110))
+        futs = [b.submit(g) for g in gs]
+        # Two full batches (8 requests) are due immediately; 2 wait.
+        assert b.run_pending() == 8
+        assert b.queued() == 2
+        assert b.run_pending() == 0          # deadline not reached
+        clock.advance(2)
+        assert b.run_pending() == 2
+        reports = [f.result(1) for f in futs]
+        direct = [served["service"].predict_e2e(g) for g in gs]
+        assert [r.e2e_s for r in reports] == [d.e2e_s for d in direct]
+        assert [r.fingerprint for r in reports] == \
+            [g.fingerprint() for g in gs]
+        st = b.stats()
+        assert st["answered"] == st["submitted"] == 10
+        assert st["batches"] == 3 and st["max_batch_observed"] == 4
+
+    def test_cache_short_circuit_skips_queue(self, served):
+        b, clock = self.mk(served)
+        g = graphs_for([120])[0]
+        served["service"].predict_e2e(g)           # warm the report cache
+        fut = b.submit(g)
+        assert fut.done() and fut.result(0).from_cache
+        assert b.queued() == 0
+        assert b.stats()["short_circuits"] == 1
+
+    def test_admission_control_overloaded(self, served):
+        served["service"].clear_cache()
+        b, clock = self.mk(served, max_queue=3)
+        gs = graphs_for(range(130, 134))
+        futs = [b.submit(g) for g in gs[:3]]
+        with pytest.raises(RPCError) as ei:
+            b.submit(gs[3])
+        assert ei.value.code == protocol.E_OVERLOADED and ei.value.retryable
+        assert b.stats()["rejected"] == 1
+        assert b.flush_all() == 3
+        assert all(f.result(1).e2e_s > 0 for f in futs)
+
+    def test_group_fairness_one_batch_each(self, served, monkeypatch):
+        """Two request groups (gbdt vs lasso family) due together: one
+        flush round serves both with one predict_batch each, the group
+        whose head waited longest first — a hot group cannot starve the
+        other."""
+        served["service"].clear_cache()
+        b, clock = self.mk(served, max_batch=8)
+        calls = []
+        real = served["service"].predict_batch
+
+        def spy(graphs, setting=None, predictor=None):
+            calls.append((predictor, len(graphs)))
+            return real(graphs, setting, predictor)
+
+        monkeypatch.setattr(served["service"], "predict_batch", spy)
+        a = graphs_for(range(140, 143))
+        c = graphs_for(range(143, 145))
+        futs = [b.submit(g, SOURCE, "gbdt") for g in a]
+        futs += [b.submit(g, SOURCE, "lasso") for g in c]
+        clock.advance(2)
+        assert b.run_pending() == 5
+        # One call per group, gbdt first (its head arrived first).
+        assert calls == [("gbdt", 3), ("lasso", 2)]
+        want = [served["service"].predict_e2e(g, SOURCE, "gbdt").e2e_s
+                for g in a]
+        want += [served["service"].predict_e2e(g, SOURCE, "lasso").e2e_s
+                 for g in c]
+        assert [f.result(1).e2e_s for f in futs] == want
+
+    def test_exactly_once_guard_is_loud(self, served):
+        from repro.rpc.batcher import PendingResult
+        p = PendingResult()
+        p._resolve("x")
+        with pytest.raises(RuntimeError):
+            p._resolve("y")
+        with pytest.raises(RuntimeError):
+            p._fail(RPCError(protocol.E_INTERNAL, "again"))
+
+    def test_unknown_setting_fails_typed(self, served):
+        served["service"].clear_cache()
+        b, clock = self.mk(served)
+        fut = b.submit(graphs_for([150])[0],
+                       DeviceSetting("other", "int8", "op_by_op"))
+        b.flush_all()
+        with pytest.raises(RPCError) as ei:
+            fut.result(1)
+        assert ei.value.code == protocol.E_UNKNOWN_SETTING
+        assert b.stats()["failed"] == 1
+
+    def test_no_default_setting_rejected_at_submit(self, served):
+        svc = LatencyService(served["hub"], predictor="gbdt")
+        b = MicroBatcher(svc, BatchPolicy(), clock=ManualClock(),
+                         auto_start=False)
+        with pytest.raises(RPCError) as ei:
+            b.submit(graphs_for([151])[0])
+        assert ei.value.code == protocol.E_UNKNOWN_SETTING
+
+    def test_closed_batcher_rejects(self, served):
+        b, clock = self.mk(served)
+        b.close()
+        with pytest.raises(RPCError) as ei:
+            b.submit(graphs_for([152])[0])
+        assert ei.value.code == protocol.E_UNAVAILABLE
+
+
+# ---------------------------------------------------------------------------
+# Server dispatch (no socket): handle_line sync mode
+# ---------------------------------------------------------------------------
+
+class TestDispatch:
+    @pytest.fixture()
+    def server(self, served):
+        srv = LatencyRPCServer(served["service"],
+                               policy=BatchPolicy(max_batch=4,
+                                                  max_wait_ticks=1))
+        yield srv
+        srv.stop()
+
+    def req(self, method, params, rid="t1"):
+        return encode_request(Request(id=rid, method=method, params=params))
+
+    def test_predict_matches_direct(self, served, server):
+        g = sample_architecture(200, SPACE)
+        out = server.handle_line(self.req("predict", {"graph": g.to_json()}))
+        resp = decode_response(out)
+        assert resp.ok
+        rep = PredictionReport.from_json(resp.result["report"])
+        assert rep.e2e_s == served["service"].predict_e2e(g).e2e_s
+        assert rep.fingerprint == g.fingerprint()
+
+    def test_unknown_method_envelope(self, server):
+        resp = decode_response(server.handle_line(self.req("predictt", {})))
+        assert not resp.ok and resp.error.code == protocol.E_UNKNOWN_METHOD
+        assert not resp.error.retryable
+
+    def test_malformed_line_still_answers(self, server):
+        resp = decode_response(server.handle_line('{"broken'))
+        assert not resp.ok and resp.error.code == protocol.E_BAD_REQUEST
+        resp = decode_response(
+            server.handle_line(json.dumps({"v": 5, "id": "z",
+                                           "method": "stats"})))
+        assert not resp.ok and resp.error.code == protocol.E_UNKNOWN_VERSION
+        assert resp.id == "z"                 # id recovered best-effort
+
+    def test_bad_graph_envelope(self, server):
+        resp = decode_response(
+            server.handle_line(self.req("predict", {"graph": {"name": "x"}})))
+        assert not resp.ok and resp.error.code == protocol.E_BAD_GRAPH
+
+    def test_predict_needs_graph(self, server):
+        resp = decode_response(server.handle_line(self.req("predict", {})))
+        assert not resp.ok and resp.error.code == protocol.E_BAD_REQUEST
+
+    def test_available_and_stats(self, served, server):
+        resp = decode_response(server.handle_line(self.req("available", {})))
+        assert ["float32/op_by_op", "gbdt"] in resp.result["banks"]
+        resp = decode_response(server.handle_line(self.req("stats", {})))
+        assert set(resp.result) == {"server", "batcher", "service"}
+        assert resp.result["server"]["protocol_version"] == PROTOCOL_VERSION
+        assert resp.result["batcher"]["policy"]["max_batch"] == 4
+
+    def test_stream_transport_pipelined(self, served, server):
+        import io
+        gs = graphs_for(range(210, 216))
+        lines = [self.req("predict", {"graph": g.to_json()}, rid=f"s{i}")
+                 for i, g in enumerate(gs)]
+        rfile = io.StringIO("".join(l + "\n" for l in lines) + "\n")
+        wfile = io.StringIO()
+        server.serve_stream(rfile, wfile)
+        deadline = __import__("time").monotonic() + 10
+        while (len([l for l in wfile.getvalue().splitlines() if l])
+               < len(gs)) and __import__("time").monotonic() < deadline:
+            __import__("time").sleep(0.01)
+        out = {}
+        for line in wfile.getvalue().splitlines():
+            resp = decode_response(line)
+            assert resp.ok
+            out[resp.id] = PredictionReport.from_json(resp.result["report"])
+        assert set(out) == {f"s{i}" for i in range(len(gs))}
+        for i, g in enumerate(gs):
+            assert out[f"s{i}"].fingerprint == g.fingerprint()
+            assert out[f"s{i}"].e2e_s == served["service"].predict_e2e(g).e2e_s
+
+
+# ---------------------------------------------------------------------------
+# Socket server + pipelined client, end to end
+# ---------------------------------------------------------------------------
+
+class TestSocket:
+    def test_predict_bit_identical_and_cached(self, live):
+        g = sample_architecture(300, SPACE)
+        direct = live["service"].predict_e2e(g)
+        rep = live["client"].predict_e2e(g)
+        assert rep.e2e_s == direct.e2e_s and rep.per_op == direct.per_op
+        again = live["client"].predict_e2e(g)
+        assert again.from_cache and again.e2e_s == direct.e2e_s
+
+    def test_pipelined_coalesce_bit_identical(self, live):
+        live["service"].clear_cache()
+        gs = graphs_for(range(310, 326))
+        before = live["server"].batcher.stats()
+        reports = live["client"].predict_pipelined(gs, SOURCE)
+        after = live["server"].batcher.stats()
+        direct = [live["service"].predict_e2e(g) for g in gs]
+        assert [r.e2e_s for r in reports] == [d.e2e_s for d in direct]
+        assert [r.fingerprint for r in reports] == \
+            [g.fingerprint() for g in gs]
+        served_n = after["answered"] - before["answered"]
+        new_batches = after["batches"] - before["batches"]
+        assert served_n == len(gs)
+        assert new_batches < len(gs)          # coalescing actually happened
+        assert after["max_batch_observed"] >= 2
+
+    def test_predict_multi_over_wire(self, live):
+        gs = graphs_for(range(330, 333))
+        multi = live["client"].predict_multi(gs, [SOURCE])
+        direct = live["service"].predict_multi(gs, [SOURCE])
+        assert set(multi) == set(direct) == {"float32/op_by_op"}
+        assert [r.e2e_s for r in multi["float32/op_by_op"]] == \
+            [r.e2e_s for r in direct["float32/op_by_op"]]
+
+    def test_error_envelopes_over_wire(self, live):
+        with pytest.raises(RPCError) as ei:
+            live["client"].call("no_such_method", {})
+        assert ei.value.code == protocol.E_UNKNOWN_METHOD
+        with pytest.raises(RPCError) as ei:
+            live["client"].predict_e2e(
+                graphs_for([340])[0],
+                DeviceSetting("other", "int8", "op_by_op"))
+        assert ei.value.code == protocol.E_UNKNOWN_SETTING
+
+    def test_server_drop_fails_fast(self, served):
+        """After the server goes away, the client refuses new sends
+        immediately instead of hanging to the full timeout."""
+        server = LatencyRPCServer(served["service"])
+        host, port = server.start()
+        cli = LatencyClient(host, port, timeout=30.0)
+        assert cli.available()                 # connection works
+        server.stop()
+        deadline = __import__("time").monotonic() + 5
+        while __import__("time").monotonic() < deadline:
+            try:
+                cli.call("available", {}, timeout=0.2)
+            except RPCError as exc:
+                if exc.code == protocol.E_UNAVAILABLE:
+                    break                      # reader noticed the close
+            __import__("time").sleep(0.01)
+        t0 = __import__("time").monotonic()
+        with pytest.raises(RPCError) as ei:
+            cli.call("available", {})
+        assert ei.value.code == protocol.E_UNAVAILABLE
+        assert __import__("time").monotonic() - t0 < 1.0   # no 30 s hang
+        cli.close()
+
+    def test_overload_rejected_then_drains(self, served):
+        server = LatencyRPCServer(
+            served["service"],
+            policy=BatchPolicy(max_batch=8, max_wait_ticks=10_000,
+                               max_queue=2),
+            clock=ManualClock(), auto_start_batcher=False)
+        host, port = server.start()
+        served["service"].clear_cache()
+        with LatencyClient(host, port, timeout=30.0) as cli:
+            gs = graphs_for(range(350, 353))
+            slots = [cli.send("predict", {"graph": g.to_json()}) for g in gs]
+            with pytest.raises(RPCError) as ei:
+                cli.wait(slots[2], timeout=10)
+            assert ei.value.code == protocol.E_OVERLOADED
+            assert ei.value.retryable
+            assert server.batcher.flush_all() == 2
+            for s, g in zip(slots[:2], gs[:2]):
+                rep = PredictionReport.from_json(
+                    cli.wait(s, timeout=10)["report"])
+                assert rep.fingerprint == g.fingerprint()
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Search-front endpoint + ServeEngine over the wire
+# ---------------------------------------------------------------------------
+
+class TestSearchFront:
+    @pytest.fixture(scope="class")
+    def report(self, served):
+        cfg = SearchConfig(population_size=12, generations=3,
+                           children_per_gen=10, tournament_size=4, seed=11,
+                           resolution=16, front_capacity=8)
+        budgets = [DeviceBudget(SOURCE, served["budget_s"])]
+        return SearchEngine(served["service"], budgets, cfg).run()
+
+    def test_report_json_roundtrip(self, report):
+        clone = SearchReport.from_json(json.loads(json.dumps(report.to_json())))
+        assert clone.front_json() == report.front_json()
+        assert clone.candidates_scored == report.candidates_scored
+
+    def test_front_served_and_filtered(self, live, report):
+        live["server"].register_search_report(report)
+        out = live["client"].search_front()
+        assert out["setting"] == "float32/op_by_op"
+        assert out["total"] == len(report.front)
+        qualities = [m["quality"] for m in out["members"]]
+        assert qualities == sorted(qualities, reverse=True)
+        # Budget filter keeps only members under the tighter budget.
+        lats = sorted(m.latencies["float32/op_by_op"] for m in report.front)
+        tight = lats[len(lats) // 2]
+        out = live["client"].search_front(budget_s=tight)
+        assert all(m["latencies"]["float32/op_by_op"] <= tight
+                   for m in out["members"])
+        assert 0 < out["total"] <= len(report.front)
+        out = live["client"].search_front(limit=1)
+        assert len(out["members"]) == 1 and out["total"] == len(report.front)
+
+    def test_front_from_checkpoint_file(self, served, report, tmp_path,
+                                        live):
+        cfg = SearchConfig(population_size=12, generations=2,
+                           children_per_gen=10, seed=5, resolution=16)
+        budgets = [DeviceBudget(SOURCE, served["budget_s"])]
+        eng = SearchEngine(served["service"], budgets, cfg)
+        eng.step()
+        path = str(tmp_path / "ckpt.json")
+        eng.save(path)
+        srv = live["server"]
+        old = srv._front
+        try:
+            srv.register_search_report(path)
+            out = live["client"].search_front()
+            assert out["total"] == len(eng.front)
+            assert all(set(m) >= {"digest", "genotype", "quality",
+                                  "latencies"} for m in out["members"])
+        finally:
+            srv._front = old
+
+    def test_unknown_setting_and_unregistered(self, served, live, report):
+        live["server"].register_search_report(report)
+        with pytest.raises(RPCError) as ei:
+            live["client"].search_front(setting="int8/op_by_op")
+        assert ei.value.code == protocol.E_UNKNOWN_SETTING
+        srv = LatencyRPCServer(served["service"])
+        try:
+            resp = decode_response(srv.handle_line(encode_request(
+                Request(id="q", method="search_front", params={}))))
+            assert not resp.ok
+            assert resp.error.code == protocol.E_UNAVAILABLE
+        finally:
+            srv.stop()
+
+
+class _StubModel:
+    """Minimal decode-capable model (mirrors tests/test_pipeline.py)."""
+
+    def init_cache(self, slots, max_len):
+        return {"pos": 0}
+
+    def decode_step(self, params, batch, cache):
+        import jax.numpy as jnp
+        logits = jnp.tile(jnp.arange(8.0), (batch["token"].shape[0], 1))
+        return logits, {"pos": cache["pos"] + 1}
+
+
+class TestServeEngineOverRPC:
+    def test_decode_step_estimate_via_client(self, live):
+        from repro.serving import ServeEngine
+        step = sample_architecture(400, SPACE)
+        direct = live["service"].predict_e2e(step, SOURCE)
+        eng = ServeEngine(_StubModel(), params={}, batch_slots=2, max_len=16,
+                          latency_service=live["client"], step_graph=step,
+                          latency_setting=SOURCE)
+        assert eng.predicted_step_s == direct.e2e_s
+        assert eng.stats()["prediction_source"] == "LatencyClient"
+        assert eng.estimate_request_s(4, 8) == pytest.approx(
+            direct.e2e_s * 11)
+
+    def test_wire_dict_report_normalized(self, served):
+        from repro.serving import ServeEngine
+
+        class DictService:
+            def predict_e2e(self, graph, setting=None):
+                return served["service"].predict_e2e(graph, setting).to_json()
+
+        step = sample_architecture(401, SPACE)
+        eng = ServeEngine(_StubModel(), params={}, batch_slots=2, max_len=16,
+                          latency_service=DictService(), step_graph=step,
+                          latency_setting=SOURCE)
+        assert eng.predicted_step_s == \
+            served["service"].predict_e2e(step, SOURCE).e2e_s
+        assert eng.step_report.num_kernels > 0

@@ -1,0 +1,186 @@
+"""Hypothesis property tests for the micro-batcher's flush policy.
+
+For *arbitrary* arrival orders, batch-size/wait policies, and tick
+sequences — driven synchronously under a `ManualClock` with no worker
+thread, so the schedule is pure state-machine — the batcher must:
+
+  * answer every request exactly once (none lost, double-resolution
+    raises);
+  * never cross-wire: each answer is the per-request value the backing
+    service computes for exactly that request's graph, bit-identical
+    to calling it directly;
+  * respect the policy: no flushed batch exceeds ``max_batch``; within
+    a (setting, family) group, requests are served FIFO;
+  * be deterministic: replaying the same event script yields the exact
+    same flush sequence (same batches, same composition, same order).
+
+The backing service is a stub (the batcher only needs
+``cache_peek``/``predict_batch``/``default_setting``/``predictor``), so
+thousands of drawn cases run in milliseconds; bit-identity against the
+*real* `LatencyService` is covered deterministically in
+tests/test_rpc.py and tests/test_concurrency.py.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep — see requirements-dev.txt
+from hypothesis import given, settings, strategies as st
+
+from repro.core.profiler import DeviceSetting
+from repro.rpc.batcher import BatchPolicy, ManualClock, MicroBatcher
+
+SETTINGS = (DeviceSetting("dev_a", "float32", "op_by_op"),
+            DeviceSetting("dev_b", "int8", "op_by_op"))
+
+
+class FakeGraph:
+    """The batcher never inspects graphs — an opaque token suffices."""
+
+    __slots__ = ("uid",)
+
+    def __init__(self, uid):
+        self.uid = uid
+
+
+class StubService:
+    """Deterministic predict_batch that records every call's composition."""
+
+    def __init__(self, cached_uids=frozenset()):
+        self.default_setting = SETTINGS[0]
+        self.predictor = "gbdt"
+        self.calls = []
+        self.cached_uids = set(cached_uids)
+
+    @staticmethod
+    def value_of(uid, setting, family):
+        return float(hash((uid, setting.dtype, family)) % 100003)
+
+    def cache_peek(self, graph, setting, family):
+        if graph.uid in self.cached_uids:
+            return ("cached", graph.uid,
+                    self.value_of(graph.uid, setting, family))
+        return None
+
+    def predict_batch(self, graphs, setting, family):
+        self.calls.append((setting.dtype, family,
+                           tuple(g.uid for g in graphs)))
+        return [("fresh", g.uid, self.value_of(g.uid, setting, family))
+                for g in graphs]
+
+
+# Event scripts: submit (which setting, which token) / advance / pump.
+EVENTS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.integers(0, 1), st.integers(0, 30)),
+        st.tuples(st.just("advance"), st.integers(1, 4), st.just(0)),
+        st.tuples(st.just("pump"), st.just(0), st.just(0)),
+    ),
+    min_size=1, max_size=40)
+
+POLICIES = st.builds(
+    BatchPolicy,
+    max_batch=st.integers(1, 6),
+    max_wait_ticks=st.integers(0, 4),
+    max_queue=st.just(10_000))
+
+
+def drive(events, policy, cached_uids=frozenset()):
+    """Run one script; returns (service, futures, uid sequence per sub)."""
+    svc = StubService(cached_uids)
+    clock = ManualClock()
+    b = MicroBatcher(svc, policy, clock=clock, auto_start=False)
+    futures = []
+    uid_seq = 0
+    for kind, a, c in events:
+        if kind == "submit":
+            g = FakeGraph((a, c, uid_seq))    # unique per submission
+            uid_seq += 1
+            futures.append((g, SETTINGS[a], b.submit(g, SETTINGS[a])))
+            b.run_pending()                    # size-triggered flushes
+        elif kind == "advance":
+            clock.advance(a)
+            b.run_pending()                    # deadline-triggered flushes
+        else:
+            b.run_pending()
+    b.flush_all()
+    return svc, futures, b
+
+
+@settings(max_examples=120, deadline=None)
+@given(events=EVENTS, policy=POLICIES)
+def test_every_request_answered_exactly_once(events, policy):
+    svc, futures, b = drive(events, policy)
+    submits = [e for e in events if e[0] == "submit"]
+    assert len(futures) == len(submits)
+    for g, setting, fut in futures:
+        assert fut.done()                      # nothing lost
+        kind, uid, value = fut.result(0)
+        assert uid == g.uid                    # not cross-wired
+        assert value == StubService.value_of(g.uid, setting, "gbdt")
+    st_ = b.stats()
+    assert st_["answered"] == len(futures)
+    assert st_["failed"] == st_["rejected"] == 0
+    assert st_["queued"] == 0
+    # Every non-short-circuited request appears in exactly one call.
+    flushed = [uid for _, _, uids in svc.calls for uid in uids]
+    assert len(flushed) == len(set(flushed)) == \
+        len(futures) - st_["short_circuits"]
+
+
+@settings(max_examples=120, deadline=None)
+@given(events=EVENTS, policy=POLICIES)
+def test_batches_bounded_and_fifo_per_group(events, policy):
+    svc, futures, _ = drive(events, policy)
+    per_group_served = {}
+    for dtype, family, uids in svc.calls:
+        assert 1 <= len(uids) <= policy.max_batch
+        per_group_served.setdefault(dtype, []).extend(uids)
+    per_group_submitted = {}
+    for g, setting, _fut in futures:
+        per_group_submitted.setdefault(setting.dtype, []).append(g.uid)
+    assert per_group_served == per_group_submitted    # FIFO, group-local
+
+
+@settings(max_examples=80, deadline=None)
+@given(events=EVENTS, policy=POLICIES)
+def test_flush_schedule_deterministic_on_replay(events, policy):
+    svc1, _, _ = drive(events, policy)
+    svc2, _, _ = drive(events, policy)
+    assert svc1.calls == svc2.calls
+
+
+@settings(max_examples=80, deadline=None)
+@given(events=EVENTS, policy=POLICIES,
+       cached=st.sets(st.integers(0, 30), max_size=10))
+def test_cache_short_circuits_never_enqueue(events, policy, cached):
+    # Mark some *tokens* cached: any submission whose token id is in the
+    # set answers immediately from cache_peek and must not reach
+    # predict_batch.
+    svc = StubService()
+    clock = ManualClock()
+    b = MicroBatcher(svc, policy, clock=clock, auto_start=False)
+    futures = []
+    for i, (kind, a, c) in enumerate(events):
+        if kind == "submit":
+            g = FakeGraph((a, c, i))
+            if c in cached:
+                svc.cached_uids.add(g.uid)
+            futures.append((g, SETTINGS[a], c in cached,
+                            b.submit(g, SETTINGS[a])))
+            b.run_pending()
+        elif kind == "advance":
+            clock.advance(a)
+            b.run_pending()
+        else:
+            b.run_pending()
+    b.flush_all()
+    flushed = {uid for _, _, uids in svc.calls for uid in uids}
+    n_cached = 0
+    for g, setting, was_cached, fut in futures:
+        kind, uid, value = fut.result(0)
+        assert uid == g.uid
+        if was_cached:
+            n_cached += 1
+            assert kind == "cached" and g.uid not in flushed
+        else:
+            assert kind == "fresh"
+    assert b.stats()["short_circuits"] == n_cached
