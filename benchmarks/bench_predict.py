@@ -1,28 +1,39 @@
-"""Prediction fast path: flattened ensembles + feature cache vs old paths.
+"""Prediction fast path: flattened ensembles, backend crossover, residency.
 
-Two sections:
+Sections:
   * tree inference — RF/GBDT batch prediction (512 rows × 100 trees),
     per-row node-walk oracle vs flattened struct-of-arrays traversal
     (numpy) vs the jit'd jax gather backend;
+  * backend crossover — numpy vs jax (resident bank) vs jax (cold bank,
+    re-uploaded per call — the pre-residency behaviour) vs pallas
+    across a rows×trees sweep, plus what "auto" resolves to at each
+    point.  Written to BENCH_predict.json at the repo root so the perf
+    trajectory is tracked across PRs;
+  * fused device scoring — host predict (float64 bounce) vs
+    `predict_on_device` (standardize→traverse→reduce→clamp on device);
   * predict_batch — LatencyService multi-graph scoring, cold
     featurization vs warm `GraphFeatures` cache (prediction LRU cleared
     both times, so the delta is featurization only).
 
 Self-contained (fits on synthetic tabular data / profiles a tiny
-suite); no prebuilt datasets.
+suite); no prebuilt datasets.  ``--smoke`` shrinks the sweep for CI.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
 from repro.core.features import clear_graph_feature_cache
 from repro.core.predictors import GBDTPredictor, RandomForestPredictor
+from repro.core.predictors.flat import (
+    AUTO_JAX_MIN_SLOTS, AUTO_PALLAS_MIN_SLOTS, resolve_backend,
+)
 from repro.core.dataset import synthetic_graphs
 from repro.core.profiler import DeviceSetting, ProfileSession
 from repro.pipeline import LatencyService
-from benchmarks.common import emit_csv
+from benchmarks.common import emit_bench_json, emit_csv
 
 N_ROWS = 512
 N_FEATURES = 16
@@ -39,7 +50,93 @@ def _bench(fn, *args, repeats=5):
     return best
 
 
-def run() -> None:
+def _crossover(rows_list, smoke):
+    """numpy / jax-resident / jax-cold / pallas sweep over flush sizes."""
+    try:
+        import jax
+        backend_platform = jax.default_backend()
+    except Exception:
+        return None
+    from repro.kernels.tree_gather_pallas import HAS_PALLAS
+
+    n_trees = 50 if smoke else N_TREES
+    rng = np.random.default_rng(7)
+    x = np.abs(rng.standard_normal((400, N_FEATURES))) \
+        * np.linspace(1, 40, N_FEATURES)
+    y = x @ rng.random(N_FEATURES) + 0.2
+    m = GBDTPredictor(n_stages=n_trees).fit(x, y)
+    flat = m.flat()
+    q = np.abs(rng.standard_normal((max(rows_list), N_FEATURES))) \
+        * np.linspace(1, 40, N_FEATURES)
+    xs = m.scaler.transform(q)
+    # Interpret-mode pallas (CPU CI) is a correctness path: orders of
+    # magnitude slower than compiled, so point it at a capped flush and
+    # record the mode so the curve is read in context.
+    pallas_mode = "compiled" if backend_platform == "tpu" else "interpret"
+    pallas_row_cap = None if pallas_mode == "compiled" else 2048
+
+    curve = []
+    for rows in rows_list:
+        xq = xs[:rows]
+        slots = rows * n_trees
+        point = {"rows": rows, "trees": n_trees, "slots": slots,
+                 "auto_resolves_to": resolve_backend("auto", slots)}
+        point["numpy_ms"] = 1e3 * _bench(flat.predict_trees, xq, "numpy")
+        point["jax_resident_ms"] = 1e3 * _bench(flat.predict_trees, xq, "jax")
+
+        def jax_cold():
+            flat._device_bank = None          # force bank re-upload
+            flat.predict_trees(xq, "jax")
+
+        point["jax_cold_bank_ms"] = 1e3 * _bench(jax_cold)
+        flat._device_bank = None              # leave a fresh bank behind
+        flat.predict_trees(xq, "jax")
+        if HAS_PALLAS and (pallas_row_cap is None or rows <= pallas_row_cap):
+            point["pallas_ms"] = 1e3 * _bench(flat.predict_trees, xq,
+                                              "pallas")
+        point["auto_ms"] = 1e3 * _bench(flat.predict_trees, xq, "auto")
+        curve.append(point)
+
+    # Fused device scoring vs the host path at the largest flush.
+    qbig = q
+    t_host = _bench(m.predict, qbig)
+    q32 = np.asarray(qbig, np.float32)
+    t_fused = _bench(m.predict_on_device, q32)
+    fused = {"rows": len(qbig), "trees": n_trees,
+             "host_float64_ms": 1e3 * t_host,
+             "device_fused_ms": 1e3 * t_fused,
+             "speedup": t_host / max(t_fused, 1e-12)}
+
+    # Soft acceptance checks (generous slack: shared CI machines).
+    big, small = curve[-1], curve[0]
+    checks = {
+        # Device-resident path must not lose to re-uploading the bank
+        # every call at large flushes.
+        "resident_not_worse_than_cold": bool(
+            big["jax_resident_ms"] <= big["jax_cold_bank_ms"] * 1.15),
+        # "auto" keeps small batches on numpy with no regression beyond
+        # the resolve_backend call itself.
+        "auto_small_batch_is_numpy": small["auto_resolves_to"] == "numpy",
+        "auto_small_batch_no_regression": bool(
+            small["auto_ms"] <= small["numpy_ms"] * 2.0 + 0.5),
+    }
+    for name, ok in checks.items():
+        assert ok, (name, curve)
+
+    db = flat._device_bank
+    return {
+        "platform": backend_platform,
+        "pallas_mode": pallas_mode,
+        "auto_jax_min_slots": AUTO_JAX_MIN_SLOTS,
+        "auto_pallas_min_slots": AUTO_PALLAS_MIN_SLOTS,
+        "crossover": curve,
+        "fused": fused,
+        "residency": db.stats() if db is not None else None,
+        "checks": checks,
+    }
+
+
+def run(smoke: bool = False) -> None:
     rng = np.random.default_rng(0)
     x = np.abs(rng.standard_normal((400, N_FEATURES))) * np.linspace(1, 40, N_FEATURES)
     y = x @ rng.random(N_FEATURES) + 0.2
@@ -69,6 +166,27 @@ def run() -> None:
                          "derived": f"skipped: {e}"})
         finally:
             m.inference_backend = "numpy"
+
+    # -- backend crossover curve (numpy / jax / pallas) ----------------------
+    rows_list = [64, 512, 2048] if smoke else [64, 256, 1024, 4096, 16384]
+    xover = _crossover(rows_list, smoke)
+    if xover is not None:
+        for p in xover["crossover"]:
+            derived = [f"auto→{p['auto_resolves_to']}"]
+            for k in ("numpy_ms", "jax_resident_ms", "jax_cold_bank_ms",
+                      "pallas_ms", "auto_ms"):
+                if k in p:
+                    derived.append(f"{k.removesuffix('_ms')}={p[k]:.2f}ms")
+            rows.append({"name": f"crossover_{p['rows']}x{p['trees']}",
+                         "value": str(p["slots"]),
+                         "derived": " ".join(derived)})
+        f = xover["fused"]
+        rows.append({"name": "fused_device_ms",
+                     "value": f"{f['device_fused_ms']:.2f}",
+                     "derived": f"{f['speedup']:.1f}x vs host float64 "
+                                f"({f['host_float64_ms']:.2f}ms) at "
+                                f"{f['rows']} rows"})
+        emit_bench_json("bench_predict", xover)
 
     # -- predict_batch featurization: cold vs warm GraphFeatures cache ------
     setting = DeviceSetting("cpu_f32", "float32", "op_by_op")
@@ -100,4 +218,7 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep for CI")
+    run(smoke=ap.parse_args().smoke)

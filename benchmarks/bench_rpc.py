@@ -37,7 +37,7 @@ from repro.core.profiler import DeviceSetting
 from repro.pipeline import LatencyService, PredictorHub, ProfileStore
 from repro.rpc.batcher import BatchPolicy, MicroBatcher, MonotonicClock
 from repro.transfer import CostModelProfileSession
-from benchmarks.common import emit_csv
+from benchmarks.common import emit_bench_json, emit_csv
 
 SETTING = DeviceSetting("cpu_f32", "float32", "op_by_op")
 SPACE = NASSpaceConfig(resolution=16)
@@ -174,7 +174,14 @@ def run(smoke: bool = False) -> None:
         BatchPolicy(max_batch=batch_cap, max_wait_ticks=8,
                     max_queue=100_000),
         window=16)      # deep pipelining → NAS-scale flushes
-    runs = auto_svc.stats()["backend_runs"]
+    auto_stats = auto_svc.stats()
+    runs = auto_stats["backend_runs"]
+    # Per-flush attribution from the batcher (rides the RPC stats path:
+    # server._stats → batcher.stats()["flush_backends"]): which resolved
+    # kernel actually served the flushes, not just service-wide totals.
+    flush_backends = st_auto["flush_backends"]
+    assert sum(flush_backends.values()) == sum(runs.values()), \
+        "flush attribution must conserve the service's backend tally"
     numpy_svc = build_service(n_train, stages, backend="numpy")
     deltas = [abs(rep.e2e_s - numpy_svc.predict_e2e(g).e2e_s)
               for g, rep in zip(load_graphs[:64], out_auto[:64])]
@@ -185,11 +192,28 @@ def run(smoke: bool = False) -> None:
         "avg_batch": round(st_auto["avg_batch"], 2),
         "backend_numpy_runs": runs.get("numpy", 0),
         "backend_jax_runs": runs.get("jax", 0),
+        "backend_pallas_runs": runs.get("pallas", 0),
+        "flush_backends": str(flush_backends),
+        "device_fused_runs": auto_stats["device_fused_runs"],
         "max_abs_delta_vs_numpy_s": float(np.max(deltas)),
     }])
+    emit_bench_json("bench_rpc", {
+        "smoke": smoke,
+        "requests": n_load,
+        "max_batch": batch_cap,
+        "gbdt_stages": stages,
+        "batched_speedup_vs_unbatched": round(speedup, 2),
+        "backend_runs": runs,
+        "flush_backends": flush_backends,
+        "device_fused_runs": auto_stats["device_fused_runs"],
+        "device_residency": auto_stats["device_residency"],
+        "max_abs_delta_vs_numpy_s": float(np.max(deltas)),
+    })
     if not smoke:
         assert runs.get("jax", 0) > 0, \
             "full-scale load should cross the 2^16 slot threshold"
+        assert flush_backends.get("jax", 0) > 0, \
+            "flush attribution should show the jax kernel serving flushes"
 
 
 def main() -> None:

@@ -1,8 +1,9 @@
-"""Shared benchmark utilities: dataset loading, CSV emission."""
+"""Shared benchmark utilities: dataset loading, CSV/JSON emission."""
 from __future__ import annotations
 
 import csv
 import io
+import json
 import os
 import sys
 from typing import Any, Dict, List, Optional, Sequence
@@ -11,6 +12,9 @@ from repro.core.dataset import LatencyDataset
 from benchmarks.build_datasets import DATA_DIR, dataset_path
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports")
+# Machine-readable perf trajectory, tracked at the repo root across PRs.
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_predict.json")
 
 
 def load_dataset(kind: str, setting: str) -> Optional[LatencyDataset]:
@@ -47,3 +51,24 @@ def emit_csv(name: str, rows: Sequence[Dict[str, Any]],
     os.makedirs(REPORT_DIR, exist_ok=True)
     with open(os.path.join(REPORT_DIR, f"{name}.csv"), "w") as f:
         f.write(text)
+
+
+def emit_bench_json(section: str, payload: Dict[str, Any]) -> None:
+    """Merge ``payload`` under ``section`` into BENCH_predict.json.
+
+    Read-modify-write so bench_predict and bench_rpc each own a section
+    without clobbering the other; the file at the repo root is the
+    cross-PR perf trajectory (crossover curves, resolved-tier counts).
+    """
+    data: Dict[str, Any] = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                data = json.load(f)
+        except Exception:
+            data = {}
+    data[section] = payload
+    with open(BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {section} → {os.path.abspath(BENCH_JSON)}")

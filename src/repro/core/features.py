@@ -475,7 +475,8 @@ class GraphFeatures:
     query, training-assembly, or profiling paths.
     """
 
-    __slots__ = ("fingerprint", "num_nodes", "matrix", "names", "index", "slots")
+    __slots__ = ("fingerprint", "num_nodes", "matrix", "names", "index",
+                 "slots", "_matrix32")
 
     def __init__(self, fingerprint: str, num_nodes: int,
                  matrix: Dict[str, np.ndarray], names: Dict[str, List[str]],
@@ -487,6 +488,7 @@ class GraphFeatures:
         self.names = names
         self.index = index
         self.slots = slots
+        self._matrix32: Dict[str, np.ndarray] = {}
 
     @classmethod
     def from_graph(cls, graph: OpGraph) -> "GraphFeatures":
@@ -505,6 +507,18 @@ class GraphFeatures:
         matrix = {t: np.stack(v) for t, v in rows.items()}
         idx = {t: np.asarray(v, dtype=np.intp) for t, v in index.items()}
         return cls(graph.fingerprint(), len(graph.nodes), matrix, names, idx, slots)
+
+    def matrix32(self, op_type: str) -> np.ndarray:
+        """Float32 view of ``matrix[op_type]`` for the device-resident
+        scoring path (cast once per GraphFeatures, cached — the
+        fingerprint LRU then amortizes it across flushes like the f64
+        matrices).  The float64 originals stay authoritative for the
+        bit-exact numpy backend."""
+        m32 = self._matrix32.get(op_type)
+        if m32 is None:
+            m32 = np.ascontiguousarray(self.matrix[op_type], dtype=np.float32)
+            self._matrix32[op_type] = m32
+        return m32
 
     def node_features(self, k: int) -> np.ndarray:
         """Feature vector of node ``k`` (a view into its type matrix)."""

@@ -30,13 +30,19 @@ enabled) and is opt-in for large batches.
 """
 from __future__ import annotations
 
+import os
 import threading
-from typing import Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 # rows × trees above which backend="auto" prefers the jax gather kernel.
 AUTO_JAX_MIN_SLOTS = 1 << 16
+# rows × trees above which backend="auto" prefers the Pallas kernel when
+# a real accelerator backs it (measured crossover: below this the
+# pallas_call dispatch overhead eats the tiling win; see
+# docs/PIPELINE.md for the curve and BENCH_predict.json for raw data).
+AUTO_PALLAS_MIN_SLOTS = 1 << 20
 
 
 def resolve_backend(backend: str, n_slots: int) -> str:
@@ -45,9 +51,16 @@ def resolve_backend(backend: str, n_slots: int) -> str:
     The one place the "auto" heuristic lives: `FlatEnsemble.predict_trees`
     and batch-serving layers that want to *record* which backend a call
     will take (`LatencyService.stats`) resolve through it, so the
-    threshold cannot drift between decision and bookkeeping.
+    thresholds cannot drift between decision and bookkeeping.
+
+    Three tiers: numpy (small, bit-exact) → jax gather (≥ 2^16 slots)
+    → pallas kernel (≥ 2^20 slots AND a compiled — non-interpret —
+    Pallas backend; on CPU-only hosts "auto" tops out at jax because
+    interpret mode is a correctness path, not a fast path).
     """
     if backend == "auto":
+        if n_slots >= AUTO_PALLAS_MIN_SLOTS and _pallas_available():
+            return "pallas"
         return ("jax" if n_slots >= AUTO_JAX_MIN_SLOTS and _jax_available()
                 else "numpy")
     return backend
@@ -57,7 +70,8 @@ class FlatEnsemble:
     """Struct-of-arrays form of a bank of regression trees."""
 
     __slots__ = ("feature", "threshold", "left", "right", "value", "roots",
-                 "max_depth", "_fclamp", "_children", "_roots_ip", "_jax_args")
+                 "max_depth", "_fclamp", "_children", "_roots_ip",
+                 "_device_bank")
 
     def __init__(self, feature: np.ndarray, threshold: np.ndarray,
                  left: np.ndarray, right: np.ndarray, value: np.ndarray,
@@ -76,7 +90,11 @@ class FlatEnsemble:
         children[1::2] = right
         self._children = children
         self._roots_ip = roots.astype(np.intp)
-        self._jax_args: Optional[Tuple] = None   # lazy device-array cache
+        # Lazy persistent device residency (kernels.tree_gather.DeviceBank):
+        # uploaded once, reused across flushes, dies with this ensemble —
+        # retrain/bank-swap rebuilds the FlatEnsemble, which IS the
+        # invalidation.
+        self._device_bank: Optional[Any] = None
 
     @property
     def n_trees(self) -> int:
@@ -131,12 +149,23 @@ class FlatEnsemble:
             depth += 1
         return depth
 
+    # -- device residency -----------------------------------------------------
+    def device_bank(self):
+        """This ensemble's resident `DeviceBank` (uploaded on first use)."""
+        db = self._device_bank
+        if db is None:
+            from repro.kernels.tree_gather import DeviceBank
+            db = self._device_bank = DeviceBank.from_flat(self)
+        return db
+
     # -- prediction -----------------------------------------------------------
     def predict_trees(self, x: np.ndarray, backend: str = "numpy") -> np.ndarray:
         """Leaf value of every tree for every row → (n_rows, n_trees).
 
         ``backend``: "numpy" (default, bit-exact float64), "jax" (jit'd
-        gather loop), or "auto" (jax for large batches when available).
+        gather loop on the resident bank), "pallas" (tiled Pallas
+        kernel; interpret mode off-TPU), or "auto" (tiered by
+        `resolve_backend`).
         """
         x = np.ascontiguousarray(x, dtype=np.float64)
         if x.ndim != 2:
@@ -146,6 +175,9 @@ class FlatEnsemble:
         if backend == "jax":
             from repro.kernels.tree_gather import predict_trees_jax
             return predict_trees_jax(self, x)
+        if backend == "pallas":
+            from repro.kernels.tree_gather_pallas import predict_trees_pallas
+            return predict_trees_pallas(self, x)
         if backend != "numpy":
             raise ValueError(f"unknown tree backend {backend!r}")
         return self._predict_trees_np(x)
@@ -171,6 +203,26 @@ def _jax_available() -> bool:
         return False
 
 
+def _pallas_available() -> bool:
+    """True when "auto" may tier up to the Pallas kernel.
+
+    Requires a compiled Pallas backend (TPU today): interpret mode runs
+    the kernel body in Python, which is orders of magnitude slower than
+    the jax gather — it exists for CPU CI parity, never for serving.
+    Set ``REPRO_AUTO_PALLAS=1`` to override (bench/curve exploration).
+    """
+    try:
+        from repro.kernels.tree_gather_pallas import HAS_PALLAS
+        if not HAS_PALLAS:
+            return False
+        if os.environ.get("REPRO_AUTO_PALLAS") == "1":
+            return True
+        import jax
+        return jax.default_backend() == "tpu"
+    except Exception:                                 # pragma: no cover
+        return False
+
+
 class FlattenedTreeModel:
     """Lazy-flattening state shared by the tree-ensemble predictors.
 
@@ -184,15 +236,20 @@ class FlattenedTreeModel:
 
     def _init_flat(self) -> None:
         self._flat: Optional[FlatEnsemble] = None
-        # Runtime knob (not serialized model state): numpy | jax | auto.
+        # Runtime knob (not serialized model state): numpy | jax | pallas
+        # | auto.
         self.inference_backend = "numpy"
         # Serializes swap-predict-restore of the knob by batch servers
         # (`LatencyService._run_model`): per model, so two threads
         # serving *different* banks still predict in parallel.
         self.backend_swap_lock = threading.Lock()
+        # Resident (mean, std) device pair for the fused path; rebuilt
+        # lazily after any invalidation (refit changes the scaler too).
+        self._device_scaler: Optional[Tuple] = None
 
     def _invalidate_flat(self) -> None:
-        self._flat = None
+        self._flat = None          # drops the DeviceBank riding on it
+        self._device_scaler = None
 
     def flat(self) -> FlatEnsemble:
         """All trees compiled into one contiguous node bank (lazy)."""
@@ -204,3 +261,39 @@ class FlattenedTreeModel:
         if self.trees:
             self.flat()
         return self
+
+    # -- device-resident fused scoring ---------------------------------------
+    def _device_reduction(self) -> Optional[Tuple[str, float, float]]:
+        """``(kind, scale, bias)`` describing how per-tree leaf values
+        become the model's prediction, or None when the subclass has no
+        device-expressible reduction (falls back to the host path).
+
+        GBDT: ``("sum", learning_rate, f0)``; RF: ``("mean", 1.0, 0.0)``.
+        """
+        return None
+
+    def predict_on_device(self, x: np.ndarray, backend: str = "jax"
+                          ) -> np.ndarray:
+        """Raw (unstandardized) float32 features → clamped predictions,
+        with standardize/traverse/reduce all on-device (no float64
+        (rows × trees) bounce through the host).  Float32 end-to-end;
+        `LatencyService` only routes here when `resolve_backend` already
+        picked a device tier.
+        """
+        red = self._device_reduction()
+        if red is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} has no device reduction")
+        from repro.kernels import tree_gather as tg
+
+        if self._device_scaler is None:
+            self._device_scaler = tg.to_device_scaler(self.scaler)
+        return tg.fused_predict(self.flat(), self._device_scaler, red, x,
+                                backend=backend)
+
+    def device_stats(self) -> Optional[Dict[str, Any]]:
+        """Residency snapshot of this model's bank, or None if nothing
+        is resident (never forces an upload)."""
+        flat = self._flat
+        db = flat._device_bank if flat is not None else None
+        return db.stats() if db is not None else None

@@ -85,6 +85,10 @@ class GBDTPredictor(FlattenedTreeModel, Predictor):
             out += self.learning_rate * tree.predict_oracle(xs)
         return out
 
+    def _device_reduction(self):
+        # pred = f0 + lr·Σ_stage leaf  →  one fused sum on device.
+        return ("sum", self.learning_rate, self.f0)
+
     # -- serialization --------------------------------------------------------
     def _config_json(self):
         return {"n_stages": self.n_stages, "learning_rate": self.learning_rate,

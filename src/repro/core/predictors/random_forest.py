@@ -66,6 +66,9 @@ class RandomForestPredictor(FlattenedTreeModel, Predictor):
         preds = np.stack([t.predict_oracle(xs) for t in self.trees])
         return preds.mean(axis=0)
 
+    def _device_reduction(self):
+        return ("mean", 1.0, 0.0)
+
     # -- serialization --------------------------------------------------------
     def _config_json(self):
         return {"n_trees": self.n_trees,

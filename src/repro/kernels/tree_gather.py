@@ -1,4 +1,4 @@
-"""`jax.jit` gather backend for flattened tree ensembles.
+"""Device-resident tree-ensemble gather backends (`jax.jit` + mesh sharding).
 
 Batched tree traversal is a pure gather workload: every (row × tree)
 slot holds a node id, and one step gathers (feature, threshold, child)
@@ -7,17 +7,37 @@ self` in `FlatEnsemble`), the update is idempotent, so a fixed-depth
 `lax.fori_loop` of ``max_depth`` iterations needs no active mask — rows
 that reached a leaf simply stay put.  That keeps the whole traversal one
 XLA computation (no host sync per level), which wins once
-rows × trees is large; the numpy mask loop wins on small batches.
+rows × trees is large; the numpy mask loop wins on small batches, and
+the Pallas kernel (`repro.kernels.tree_gather_pallas`) wins above that.
+
+Residency (`DeviceBank`): the flattened struct-of-arrays bank is
+uploaded to the accelerator ONCE per `FlatEnsemble` and reused across
+every subsequent flush — the bank arrays live on `flat._device_bank`
+until the ensemble itself is invalidated (retrain / bank swap), so a
+serving process pays host→device transfer of the trees exactly once.
+Inputs are staged through the same layer: float32 (half the bytes of
+the old float64 bounce) and donated to the jit'd traversal, so
+repeat-shape flushes let XLA recycle the input buffer instead of
+accumulating live copies.
+
+Sharding: when the process sees more than one accelerator, the bank is
+built against a 1-axis ``("rows",)`` mesh (`repro.launch.mesh.flush_mesh`)
+— bank arrays replicated, flush rows sharded via `shard_map`, results
+reassembled deterministically in row order (rows are padded to a device
+multiple and the pad sliced off, so reassembly is a plain row-major
+gather).
 
 Precision: runs at jax's default precision (float32 unless x64 is
 enabled), so predictions can differ from the float64 numpy backend in
 the last ulps — and near-tie thresholds can route differently.  The
-numpy backend stays the bit-exact default; this one is opt-in
-(``backend="jax"`` / ``"auto"``) for large-batch NAS scoring.
+numpy backend stays the bit-exact default; device tiers are opt-in
+(``backend="jax"|"pallas"`` / ``"auto"``) for large-batch NAS scoring.
 """
 from __future__ import annotations
 
+import threading
 from functools import partial
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -29,10 +49,33 @@ try:
 except Exception:                                     # pragma: no cover
     HAS_JAX = False
 
+# Lifetime counters (survive bank invalidation — `DeviceBank` instances
+# die with their FlatEnsemble, these do not).  `LatencyService.stats()`
+# reports both views: what is resident now and what was ever uploaded.
+_COUNTERS = {"banks_built": 0, "bank_bytes": 0, "inputs_staged": 0,
+             "input_bytes": 0}
+_COUNTERS_LOCK = threading.Lock()
+
+# Flushes below this many rows skip mesh sharding: the all-gather +
+# dispatch overhead beats the per-device win on small batches.
+SHARD_MIN_ROWS = 1024
+
+
+def residency_counters() -> Dict[str, int]:
+    """Process-lifetime upload totals (includes invalidated banks)."""
+    with _COUNTERS_LOCK:
+        return dict(_COUNTERS)
+
+
+def _count(**deltas: int) -> None:
+    with _COUNTERS_LOCK:
+        for k, v in deltas.items():
+            _COUNTERS[k] += v
+
 
 if HAS_JAX:
-    @partial(jax.jit, static_argnames=("depth",))
-    def _traverse(feature, threshold, left, right, value, roots, x, depth):
+    def _traverse_core(feature, threshold, left, right, value, roots, x,
+                       *, depth):
         n = x.shape[0]
         nid = jnp.tile(roots[None, :], (n, 1))            # (rows, trees)
 
@@ -45,21 +88,227 @@ if HAS_JAX:
         nid = lax.fori_loop(0, depth, body, nid)
         return value[nid]
 
+    # Input donation: the staged f32 buffer is consumed by the call, so
+    # XLA reuses its memory on the next same-shape flush instead of
+    # holding both copies live (the residency layer's input half).
+    # The CPU backend cannot honor donation and warns per call, so only
+    # ask for it where it works.
+    _DONATE = ({"donate_argnames": ("x",)}
+               if jax.default_backend() in ("tpu", "gpu") else {})
+    _traverse = jax.jit(_traverse_core, static_argnames=("depth",),
+                        **_DONATE)
 
-def predict_trees_jax(flat, x: np.ndarray) -> np.ndarray:
-    """(n_rows, n_trees) leaf values via the jit'd gather loop."""
-    if not HAS_JAX:                                       # pragma: no cover
-        raise RuntimeError("jax is unavailable — use the numpy tree backend")
-    args = flat._jax_args
-    if args is None:
+    def _fused_core(feature, threshold, left, right, value, roots,
+                    mean, std, scale, bias, x, *, depth, kind):
+        xs = (x - mean) / std                             # standardize on device
+        vals = _traverse_core(feature, threshold, left, right, value,
+                              roots, xs, depth=depth)
+        red = jnp.sum(vals, axis=1) if kind == "sum" else jnp.mean(vals, axis=1)
+        return jnp.maximum(bias + scale * red, 0.0)       # Predictor.predict clamp
+
+    _fused = jax.jit(_fused_core, static_argnames=("depth", "kind"),
+                     **_DONATE)
+
+
+class DeviceBank:
+    """One `FlatEnsemble`'s arrays resident on the accelerator.
+
+    Built lazily by `FlatEnsemble.device_bank()` and cached on the
+    ensemble, so the host→device transfer of the bank happens once per
+    trained ensemble — retrain/bank-swap drops the FlatEnsemble (and
+    this bank with it), which is the invalidation path.  `uploads`
+    stays 1 for the bank arrays by construction; the regression test in
+    tests/test_fastpath.py pins that.
+    """
+
+    __slots__ = ("n_nodes", "n_trees", "depth", "feature", "threshold",
+                 "left", "right", "value", "roots", "mesh", "nbytes",
+                 "uploads", "inputs_staged", "input_bytes",
+                 "_pallas_args", "_fn_cache", "_lock")
+
+    def __init__(self) -> None:
+        self._pallas_args: Optional[Tuple] = None
+        self._fn_cache: Dict[Tuple, Any] = {}
+        self._lock = threading.Lock()
+        self.mesh = None
+        self.uploads = 0
+        self.inputs_staged = 0
+        self.input_bytes = 0
+
+    @classmethod
+    def from_flat(cls, flat) -> "DeviceBank":
+        if not HAS_JAX:                                   # pragma: no cover
+            raise RuntimeError("jax is unavailable — use the numpy tree backend")
+        db = cls()
+        db.n_nodes = flat.n_nodes
+        db.n_trees = flat.n_trees
+        db.depth = max(1, flat.max_depth)
+        db.mesh = _flush_mesh()
         # Leaves carry feature = -1; clamp to 0 so the take_along_axis
         # gather stays in-bounds (self-looped slots ignore the compare).
-        args = (jnp.asarray(np.maximum(flat.feature, 0)),
-                jnp.asarray(flat.threshold),
-                jnp.asarray(flat.left),
-                jnp.asarray(flat.right),
-                jnp.asarray(flat.value),
-                jnp.asarray(flat.roots))
-        flat._jax_args = args
-    out = _traverse(*args, jnp.asarray(x), depth=max(1, flat.max_depth))
+        host = (np.maximum(flat.feature, 0).astype(np.int32),
+                flat.threshold.astype(np.float32),
+                flat.left.astype(np.int32),
+                flat.right.astype(np.int32),
+                flat.value.astype(np.float32),
+                flat.roots.astype(np.int32))
+        if db.mesh is not None:
+            repl = jax.sharding.NamedSharding(db.mesh,
+                                              jax.sharding.PartitionSpec())
+            dev = tuple(jax.device_put(a, repl) for a in host)
+        else:
+            dev = tuple(jnp.asarray(a) for a in host)
+        (db.feature, db.threshold, db.left, db.right, db.value,
+         db.roots) = dev
+        db.nbytes = sum(a.nbytes for a in host)
+        db.uploads = 1
+        _count(banks_built=1, bank_bytes=db.nbytes)
+        return db
+
+    @property
+    def bank_args(self) -> Tuple:
+        return (self.feature, self.threshold, self.left, self.right,
+                self.value, self.roots)
+
+    # -- input staging --------------------------------------------------------
+    def stage_input(self, x: np.ndarray, *, sharded: bool = True):
+        """Host rows → committed f32 device array (row-sharded on a mesh).
+
+        Rows are padded up to a device multiple when sharding; callers
+        slice results back to ``x.shape[0]`` — padding + row-major
+        gather is what makes multi-device reassembly deterministic.
+        """
+        x32 = np.ascontiguousarray(x, dtype=np.float32)
+        mesh = self.mesh if (sharded and len(x32) >= SHARD_MIN_ROWS) else None
+        if mesh is not None:
+            ndev = mesh.devices.size
+            pad = (-len(x32)) % ndev
+            if pad:
+                x32 = np.concatenate(
+                    [x32, np.zeros((pad, x32.shape[1]), np.float32)])
+            sh = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("rows", None))
+            xd = jax.device_put(x32, sh)
+        else:
+            xd = jnp.asarray(x32)
+        with self._lock:
+            self.inputs_staged += 1
+            self.input_bytes += x32.nbytes
+        _count(inputs_staged=1, input_bytes=x32.nbytes)
+        return xd
+
+    # -- traversal dispatch ---------------------------------------------------
+    def _sharded_fn(self, key: Tuple, core, out_rank2: bool):
+        """`shard_map`-wrapped jit of ``core`` over the rows axis (cached)."""
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            from jax.experimental.shard_map import shard_map
+
+            P = jax.sharding.PartitionSpec
+            n_repl = 6 if out_rank2 else 10
+            fn = jax.jit(shard_map(
+                core, mesh=self.mesh,
+                in_specs=(P(),) * n_repl + (P("rows", None),),
+                out_specs=P("rows", None) if out_rank2 else P("rows")))
+            with self._lock:
+                self._fn_cache.setdefault(key, fn)
+            fn = self._fn_cache[key]
+        return fn
+
+    def gather_leaves(self, xd) -> Any:
+        """(rows, trees) leaf values for staged rows ``xd`` (device)."""
+        if self.mesh is not None and _row_sharded(xd):
+            fn = self._sharded_fn(("traverse", self.depth),
+                                  partial(_traverse_core, depth=self.depth),
+                                  out_rank2=True)
+            return fn(*self.bank_args, xd)
+        return _traverse(*self.bank_args, xd, depth=self.depth)
+
+    def fused(self, mean, std, scale, bias, xd, kind: str) -> Any:
+        """standardize → traverse → reduce → clamp, one device program."""
+        if self.mesh is not None and _row_sharded(xd):
+            fn = self._sharded_fn(("fused", self.depth, kind),
+                                  partial(_fused_core, depth=self.depth,
+                                          kind=kind),
+                                  out_rank2=False)
+            return fn(*self.bank_args, mean, std, scale, bias, xd)
+        return _fused(*self.bank_args, mean, std, scale, bias, xd,
+                      depth=self.depth, kind=kind)
+
+    # -- introspection --------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        return {"nbytes": int(self.nbytes), "n_nodes": int(self.n_nodes),
+                "n_trees": int(self.n_trees), "uploads": int(self.uploads),
+                "inputs_staged": int(self.inputs_staged),
+                "input_bytes": int(self.input_bytes),
+                "sharded": self.mesh is not None}
+
+
+def _row_sharded(xd) -> bool:
+    """True when ``xd`` was staged with a row sharding (mesh flush)."""
+    sh = getattr(xd, "sharding", None)
+    spec = getattr(sh, "spec", None)
+    return bool(spec) and spec[0] == "rows"
+
+
+def _flush_mesh():
+    """1-axis ``("rows",)`` mesh over local devices, or None (1 device)."""
+    try:
+        from repro.launch.mesh import flush_mesh
+        return flush_mesh()
+    except Exception:                                 # pragma: no cover
+        return None
+
+
+# -- public backends ----------------------------------------------------------
+
+def predict_trees_jax(flat, x: np.ndarray) -> np.ndarray:
+    """(n_rows, n_trees) leaf values via the jit'd gather loop.
+
+    Bank arrays come from the persistent `DeviceBank` (uploaded once per
+    ensemble); the input is staged f32 + donated, so repeat-shape
+    flushes recycle buffers instead of re-transferring the bank.
+    """
+    if not HAS_JAX:                                       # pragma: no cover
+        raise RuntimeError("jax is unavailable — use the numpy tree backend")
+    db = flat.device_bank()
+    n = x.shape[0]
+    out = db.gather_leaves(db.stage_input(x))
+    return np.asarray(out[:n], dtype=np.float64)
+
+
+def to_device_scaler(scaler) -> Tuple:
+    """(mean, std) as resident f32 device arrays (cached by the model)."""
+    return (jnp.asarray(scaler.mean.astype(np.float32)),
+            jnp.asarray(scaler.std.astype(np.float32)))
+
+
+def fused_predict(flat, device_scaler: Tuple, reduction: Tuple,
+                  x: np.ndarray, backend: str = "jax") -> np.ndarray:
+    """Whole per-op-type predict on device: raw f32 features in,
+    clamped latencies out.
+
+    ``reduction`` is the model's ``(kind, scale, bias)`` — GBDT is
+    ``("sum", learning_rate, f0)``, RF is ``("mean", 1.0, 0.0)`` — so
+    standardization, traversal, the stage/tree reduction, and the ≥0
+    clamp all run in one device program instead of bouncing a float64
+    (rows × trees) matrix back through the host.
+    """
+    if not HAS_JAX:                                       # pragma: no cover
+        raise RuntimeError("jax is unavailable — use the numpy tree backend")
+    kind, scale, bias = reduction
+    mean, std = device_scaler
+    db = flat.device_bank()
+    n = x.shape[0]
+    if backend == "pallas":
+        from repro.kernels.tree_gather_pallas import gather_leaves_pallas
+
+        xd = (db.stage_input(x, sharded=False) - mean) / std
+        vals = gather_leaves_pallas(db, xd)[:n, :db.n_trees]
+        red = jnp.sum(vals, axis=1) if kind == "sum" \
+            else jnp.mean(vals, axis=1)
+        out = jnp.maximum(jnp.float32(bias) + jnp.float32(scale) * red, 0.0)
+    else:
+        out = db.fused(mean, std, jnp.float32(scale), jnp.float32(bias),
+                       db.stage_input(x), kind)[:n]
     return np.asarray(out, dtype=np.float64)

@@ -1,0 +1,171 @@
+"""Pallas tree-gather kernel: batched ensemble traversal on-device.
+
+Tiling: the (rows × trees) slot matrix rides the grid — each cell
+scores a ``(block_rows, block_trees)`` tile.  The flattened
+struct-of-arrays bank (feature/threshold/children/value, leaves
+self-looping so fixed-depth traversal is idempotent — see
+`FlatEnsemble`) is small relative to a flush, so every cell maps the
+FULL bank plus its row-block of inputs and tree-block of roots; the
+traversal is then ``max_depth`` rounds of pure gathers with no
+cross-cell communication:
+
+    nid ← roots                       (block_rows, block_trees)
+    ×depth:  f   ← feature[nid]
+             xv  ← x[row, f]          (take_along_axis)
+             nid ← xv <= threshold[nid] ? left[nid] : right[nid]
+    out ← value[nid]
+
+Layout: TPU refs want ≥2D last-dim-128 shapes, so bank arrays are
+staged as ``(1, n_pad)`` with nodes padded to a lane multiple (pad
+nodes are never reached — roots and children always land in-bank) and
+roots as ``(1, t_pad)`` padded with root 0 (pad tree columns compute
+tree 0 again and are sliced off).  The same compare form (``xv <=
+thr`` on float32) as the jax gather backend keeps the two device tiers
+bit-aligned with each other.
+
+CPU CI runs this exact kernel body under ``interpret=True`` (the
+default off-TPU, same gate as kernels/ops.py), so parity against the
+numpy oracle is exercised without an accelerator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    HAS_PALLAS = True
+except Exception:                                     # pragma: no cover
+    HAS_PALLAS = False
+
+import numpy as np
+
+Array = Any
+
+LANE = 128
+# Per-cell working set ceiling: 5 bank arrays + x block + out block must
+# sit in VMEM (~16 MB/core on current TPUs; use half as headroom).
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _tree_gather_kernel(feat_ref, thr_ref, left_ref, right_ref, val_ref,
+                        roots_ref, x_ref, o_ref, *, depth: int):
+    x = x_ref[...]                                    # (block_rows, d_pad)
+    feat = feat_ref[0]                                # (n_pad,) int32
+    thr = thr_ref[0]
+    left = left_ref[0]
+    right = right_ref[0]
+    val = val_ref[0]
+    nid = jnp.tile(roots_ref[0][None, :], (x.shape[0], 1))
+
+    def body(_, nid):
+        f = feat[nid]
+        xv = jnp.take_along_axis(x, f, axis=1)
+        return jnp.where(xv <= thr[nid], left[nid], right[nid])
+
+    nid = jax.lax.fori_loop(0, depth, body, nid)
+    o_ref[...] = val[nid]
+
+
+if HAS_PALLAS:
+    @functools.partial(jax.jit, static_argnames=("depth", "block_rows",
+                                                 "block_trees", "interpret"))
+    def _gather(feat2, thr2, left2, right2, val2, roots2, x, *,
+                depth: int, block_rows: int, block_trees: int,
+                interpret: bool):
+        n, d = x.shape
+        n_pad = feat2.shape[1]
+        t_pad = roots2.shape[1]
+        d_pad = _round_up(d, LANE)
+        bm = min(block_rows, _round_up(n, 8))
+        bt = block_trees if t_pad % block_trees == 0 else LANE
+        rows_pad = _round_up(n, bm)
+        x = jnp.pad(x, ((0, rows_pad - n), (0, d_pad - d)))
+        grid = (rows_pad // bm, t_pad // bt)
+        bank_spec = lambda shape: pl.BlockSpec(shape, lambda i, j: (0, 0))
+        return pl.pallas_call(
+            functools.partial(_tree_gather_kernel, depth=depth),
+            grid=grid,
+            in_specs=[
+                bank_spec((1, n_pad)),                # feature
+                bank_spec((1, n_pad)),                # threshold
+                bank_spec((1, n_pad)),                # left
+                bank_spec((1, n_pad)),                # right
+                bank_spec((1, n_pad)),                # value
+                pl.BlockSpec((1, bt), lambda i, j: (0, j)),
+                pl.BlockSpec((bm, d_pad), lambda i, j: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, bt), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((rows_pad, t_pad), jnp.float32),
+            interpret=interpret,
+        )(feat2, thr2, left2, right2, val2, roots2, x)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pallas_bank_args(db) -> Tuple:
+    """``(1, n_pad)`` / ``(1, t_pad)`` views of a DeviceBank, cached.
+
+    Derived on-device from the resident arrays (a pad + reshape, not a
+    re-upload), so residency counters are unaffected.
+    """
+    args = db._pallas_args
+    if args is None:
+        n_pad = _round_up(db.n_nodes, LANE)
+        t_pad = _round_up(db.n_trees, LANE)
+
+        def bank2(a):
+            return jnp.pad(a, (0, n_pad - db.n_nodes))[None, :]
+
+        args = (bank2(db.feature), bank2(db.threshold), bank2(db.left),
+                bank2(db.right), bank2(db.value),
+                jnp.pad(db.roots, (0, t_pad - db.n_trees))[None, :])
+        db._pallas_args = args
+    return args
+
+
+def gather_leaves_pallas(db, xd, *, block_rows: int = 256,
+                         block_trees: int = 128,
+                         interpret: Optional[bool] = None) -> Array:
+    """(≥rows, ≥trees) leaf-value tile for staged device rows ``xd``.
+
+    Output is padded to block multiples; callers slice to
+    ``[:n_rows, :db.n_trees]``.
+    """
+    args = pallas_bank_args(db)
+    n_pad = args[0].shape[1]
+    d_pad = _round_up(xd.shape[1], LANE)
+    bm = min(block_rows, _round_up(xd.shape[0], 8))
+    cell_bytes = 5 * n_pad * 4 + bm * d_pad * 4 + bm * block_trees * 4
+    if cell_bytes > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"pallas tree-gather cell needs {cell_bytes} B "
+            f"(> {VMEM_BUDGET_BYTES} B VMEM budget) for "
+            f"{db.n_nodes} nodes — use backend='jax' for banks this large "
+            f"or shrink block_rows")
+    if interpret is None:
+        interpret = _interpret()
+    return _gather(*args, xd, depth=db.depth, block_rows=block_rows,
+                   block_trees=block_trees, interpret=interpret)
+
+
+def predict_trees_pallas(flat, x: np.ndarray, *, block_rows: int = 256,
+                         block_trees: int = 128,
+                         interpret: Optional[bool] = None) -> np.ndarray:
+    """(n_rows, n_trees) float64 leaf values via the Pallas kernel."""
+    if not HAS_PALLAS:                                # pragma: no cover
+        raise RuntimeError("pallas is unavailable — use backend='jax' or "
+                           "'numpy'")
+    db = flat.device_bank()
+    xd = db.stage_input(x, sharded=False)
+    out = gather_leaves_pallas(db, xd, block_rows=block_rows,
+                               block_trees=block_trees, interpret=interpret)
+    return np.asarray(out[:x.shape[0], :flat.n_trees], dtype=np.float64)

@@ -36,6 +36,26 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
+def flush_mesh(max_devices: Optional[int] = None):
+    """1-axis ``("rows",)`` mesh over local devices for sharding giant
+    prediction flushes (whole NAS generations / RPC micro-batches), or
+    None on a single-device host so callers keep the unsharded path.
+
+    The bank is replicated across the axis and flush rows sharded along
+    it; reassembly is deterministic because rows are padded to a device
+    multiple and gathered back in row order (see
+    `repro.kernels.tree_gather.DeviceBank`).
+    """
+    import jax
+
+    n = len(jax.devices())
+    if max_devices is not None:
+        n = min(n, max_devices)
+    if n <= 1:
+        return None
+    return make_mesh((n,), ("rows",))
+
+
 def elastic_mesh_shape(n_devices: int, *, model_parallel: int = 16,
                        pods: int = 1) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
     """Choose a mesh for whatever device count survived (elastic restart).

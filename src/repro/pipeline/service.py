@@ -114,6 +114,9 @@ class LatencyService:
         # recorded in ``backend_runs`` (see `stats`).
         self.inference_backend = inference_backend
         self.backend_runs: Dict[str, int] = {}
+        # Flushes served by the fused device path (subset of the
+        # jax/pallas tallies in backend_runs).
+        self.device_fused_runs = 0
         self.predict_batch_calls = 0
         self._cache: "OrderedDict[Tuple[str, str, str], PredictionReport]" = OrderedDict()
         self._hub_version = hub.version
@@ -240,26 +243,28 @@ class LatencyService:
         # graph.  `graph_features` memoizes per fingerprint, so a graph
         # the process has seen before (NAS re-scoring after a cache
         # clear, retraining) contributes without re-running featurizers.
-        mats: Dict[str, List[np.ndarray]] = {}
+        gfs: Dict[str, List[Any]] = {}          # op_type → GraphFeatures refs
         slots: Dict[str, List[Tuple[int, int]]] = {}  # op_type → (fresh idx, node idx)
         for j, g in enumerate(exec_graphs):
             gf = graph_features(g)
-            for op_type, x in gf.matrix.items():
-                mats.setdefault(op_type, []).append(x)
+            for op_type in gf.matrix:
+                gfs.setdefault(op_type, []).append(gf)
                 slots.setdefault(op_type, []).extend(
                     (j, int(k)) for k in gf.index[op_type])
 
         # One predictor call per op type; unseen types contribute 0
-        # (same fallback as PredictorBank.predict_op).
+        # (same fallback as PredictorBank.predict_op).  `_run_model`
+        # assembles the batch matrix itself — float32 straight to the
+        # device for the fused path, float64 for the host path — so the
+        # precision of the backend it resolves is what gets built.
         per_op: List[List[Optional[Tuple[str, float]]]] = [
             [None] * len(g.nodes) for g in exec_graphs]
-        for op_type, xs in mats.items():
-            x = xs[0] if len(xs) == 1 else np.concatenate(xs, axis=0)
+        for op_type, group in gfs.items():
             model = bank.predictors.get(op_type)
             if model is None:
-                preds = np.zeros(len(x))
+                preds = np.zeros(len(slots[op_type]))
             else:
-                preds = self._run_model(model, x)     # already clamped ≥ 0
+                preds = self._run_model(model, group, op_type)  # clamped ≥ 0
             for (j, k), p in zip(slots[op_type], preds):
                 per_op[j][k] = (op_type, float(p))
 
@@ -325,14 +330,29 @@ class LatencyService:
         return out
 
     # -- model dispatch ------------------------------------------------------
-    def _run_model(self, model, x: np.ndarray) -> np.ndarray:
+    def _run_model(self, model, x, op_type: Optional[str] = None
+                   ) -> np.ndarray:
         """One per-op-type predictor call, with the backend heuristic.
+
+        ``x`` is either a ready float64 matrix (direct callers, tests)
+        or the flush's list of `GraphFeatures` for ``op_type`` — the
+        latter lets this method build the batch in the precision the
+        resolved backend wants: float32 fed straight to the device for
+        the fused path, float64 for the host path, never both.
 
         Tree-ensemble models (or calibrated wrappers around them) run
         under this service's ``inference_backend`` policy; the resolved
         backend is tallied in ``backend_runs`` so benchmarks can assert
         which path population-scale scoring actually took.
         """
+        group = None if isinstance(x, np.ndarray) else x
+
+        def host_x() -> np.ndarray:
+            if group is None:
+                return x
+            ms = [gf.matrix[op_type] for gf in group]
+            return ms[0] if len(ms) == 1 else np.concatenate(ms, axis=0)
+
         # `tree_model()` sees through wrappers (calibrated transfer
         # predictors); non-tree families and stub models go direct.
         flat_model = model.tree_model() if hasattr(model, "tree_model") \
@@ -341,21 +361,44 @@ class LatencyService:
             with self._lock:
                 self.backend_runs["direct"] = \
                     self.backend_runs.get("direct", 0) + 1
-            return model.predict(x)
+            return model.predict(host_x())
+        n_rows = (len(x) if group is None
+                  else sum(len(gf.matrix[op_type]) for gf in group))
         backend = resolve_backend(self.inference_backend,
-                                  len(x) * flat_model.flat().n_trees)
+                                  n_rows * flat_model.flat().n_trees)
+        # Device tiers on an unwrapped tree model take the fused path:
+        # standardize → traverse → reduce → clamp in one device program
+        # on the resident bank, fed float32 feature matrices with no
+        # host float64 bounce.  No backend-knob swap is involved, so
+        # concurrent flushes of the same model don't serialize here.
+        # (Calibrated wrappers still resolve device backends — their
+        # inner traversal goes through the swap path below and benefits
+        # from bank residency, just not from fusion.)
+        red_fn = getattr(model, "_device_reduction", None)
+        if (backend in ("jax", "pallas") and group is not None
+                and flat_model is model
+                and red_fn is not None and red_fn() is not None):
+            ms = [gf.matrix32(op_type) for gf in group]
+            x32 = ms[0] if len(ms) == 1 else np.concatenate(ms, axis=0)
+            preds = model.predict_on_device(x32, backend=backend)
+            with self._lock:
+                self.backend_runs[backend] = \
+                    self.backend_runs.get(backend, 0) + 1
+                self.device_fused_runs += 1
+            return preds
         # The knob is model state shared by every thread serving this
         # bank — swap, predict, and restore as one atomic section.  The
         # lock lives on the model (calibrated wrappers across settings
         # can share one underlying flat model), so threads serving
         # *different* models still predict in parallel.
+        xh = host_x()
         swap_lock = getattr(flat_model, "backend_swap_lock",
                             self._backend_lock)
         with swap_lock:
             prev = flat_model.inference_backend
             flat_model.inference_backend = backend
             try:
-                preds = model.predict(x)
+                preds = model.predict(xh)
             finally:
                 flat_model.inference_backend = prev
         with self._lock:
@@ -383,17 +426,54 @@ class LatencyService:
             return {"size": len(self._cache), "capacity": self.cache_size,
                     "hits": self.cache_hits, "misses": self.cache_misses}
 
+    def backend_run_counts(self) -> Dict[str, int]:
+        """Snapshot of ``backend_runs`` — cheap enough for the RPC
+        batcher to diff around every flush (per-flush attribution)."""
+        with self._lock:
+            return dict(self.backend_runs)
+
+    def device_residency(self) -> Dict[str, Any]:
+        """What is resident on the accelerator right now, plus lifetime
+        upload totals.  Never forces an upload: banks that have not been
+        queried through a device tier report nothing."""
+        resident = {"banks": 0, "bytes": 0, "bank_uploads": 0,
+                    "inputs_staged": 0, "sharded_banks": 0}
+        for bank in list(self.hub.banks.values()):
+            for model in bank.predictors.values():
+                tm = model.tree_model() if hasattr(model, "tree_model") \
+                    else None
+                st = tm.device_stats() if (
+                    tm is not None and hasattr(tm, "device_stats")) else None
+                if st is None:
+                    continue
+                resident["banks"] += 1
+                resident["bytes"] += st["nbytes"]
+                resident["bank_uploads"] += st["uploads"]
+                resident["inputs_staged"] += st["inputs_staged"]
+                resident["sharded_banks"] += int(st["sharded"])
+        out: Dict[str, Any] = dict(resident)
+        try:
+            from repro.kernels.tree_gather import residency_counters
+            out["lifetime"] = residency_counters()
+        except Exception:                             # pragma: no cover
+            pass
+        return out
+
     def stats(self) -> Dict[str, Any]:
         """Cache counters + which tree backend batched queries ran on
         (one consistent snapshot — the lock is reentrant, so nesting
         `cache_info` keeps the two views in one critical section)."""
         with self._lock:
-            return {
+            out = {
                 **self.cache_info(),
                 "predict_batch_calls": self.predict_batch_calls,
                 "inference_backend": self.inference_backend,
                 "backend_runs": dict(self.backend_runs),
+                "device_fused_runs": self.device_fused_runs,
             }
+        # Outside the counter lock: walks hub banks (its own structures).
+        out["device_residency"] = self.device_residency()
+        return out
 
     def clear_cache(self) -> None:
         with self._lock:

@@ -223,6 +223,11 @@ class MicroBatcher:
         self.batches = 0
         self.batched_requests = 0
         self.max_batch_observed = 0
+        # Which resolved tree backend served flushes: per-flush deltas of
+        # the service's backend_runs tally (numpy / jax / pallas /
+        # direct), so the RPC stats path can answer "which kernel
+        # actually served my batch" without a service round-trip.
+        self.flush_backends: Dict[str, int] = {}
         if hasattr(self.clock, "subscribe"):
             self.clock.subscribe(self._wake)
         self._worker: Optional[threading.Thread] = None
@@ -303,6 +308,12 @@ class MicroBatcher:
     def _flush(self, batch: List[_Entry]) -> None:
         """One `predict_batch` for one group batch; resolve positionally."""
         graphs = [e.graph for e in batch]
+        # Per-flush backend attribution: diff the service's resolved-
+        # backend tally around the call.  (With overlapping flushes a
+        # delta can attribute a concurrent flush's runs to this one —
+        # totals stay exact, attribution is per-flush best-effort.)
+        counts_fn = getattr(self.service, "backend_run_counts", None)
+        before = counts_fn() if callable(counts_fn) else None
         try:
             reports = self.service.predict_batch(
                 graphs, batch[0].setting, batch[0].family)
@@ -319,10 +330,17 @@ class MicroBatcher:
         except Exception as exc:
             err = RPCError(E_INTERNAL, f"{type(exc).__name__}: {exc}")
             reports = None
+        after = counts_fn() if before is not None else None
         with self._cond:
             self.batches += 1
             self.batched_requests += len(batch)
             self.max_batch_observed = max(self.max_batch_observed, len(batch))
+            if after is not None:
+                for k, v in after.items():
+                    d = v - before.get(k, 0)
+                    if d > 0:
+                        self.flush_backends[k] = \
+                            self.flush_backends.get(k, 0) + d
             if reports is None:
                 self.failed += len(batch)
             else:
@@ -413,6 +431,7 @@ class MicroBatcher:
                 "batches": self.batches,
                 "batched_requests": self.batched_requests,
                 "max_batch_observed": self.max_batch_observed,
+                "flush_backends": dict(self.flush_backends),
                 "avg_batch": (self.batched_requests / self.batches
                               if self.batches else 0.0),
                 "queued": self._queued,

@@ -208,3 +208,52 @@ def test_dryrun_reduced_cell_on_8_devices():
         print("DRYRUN_OK", rec["collective_bytes"])
     """)
     assert "DRYRUN_OK" in out
+
+
+# Flush sharding only needs the stable jax.experimental.shard_map (old
+# API), so unlike the mesh-API tests above it runs on this container.
+try:
+    from jax.experimental.shard_map import shard_map as _sm  # noqa: F401
+    _HAS_SHARD_MAP = True
+except Exception:                                 # pragma: no cover
+    _HAS_SHARD_MAP = False
+
+requires_shard_map = pytest.mark.skipif(
+    not _HAS_SHARD_MAP, reason="needs jax.experimental.shard_map")
+
+
+@requires_shard_map
+def test_sharded_tree_flush_matches_numpy_and_is_deterministic():
+    """Giant flushes shard rows across the device mesh; reassembly is
+    row-order deterministic and bank upload stays at one."""
+    out = run_subprocess("""
+        from repro.core.predictors import GBDTPredictor
+
+        rng = np.random.default_rng(0)
+        x = np.abs(rng.standard_normal((200, 8))) * np.linspace(1, 30, 8)
+        y = x @ rng.random(8) + 0.1
+        m = GBDTPredictor(n_stages=20).fit(x, y)
+        # 2050 rows: above SHARD_MIN_ROWS and not a multiple of the 8
+        # forced host devices, so the pad-and-slice path is exercised.
+        q = np.abs(rng.standard_normal((2050, 8))) * np.linspace(1, 30, 8)
+        flat = m.flat()
+        xs = m.scaler.transform(q)
+        ref = flat.predict_trees(xs, backend="numpy")
+        got = flat.predict_trees(xs, backend="jax")
+        db = flat.device_bank()
+        assert db.mesh is not None and db.stats()["sharded"]
+        assert got.shape == ref.shape
+        assert np.allclose(got, ref, rtol=1e-4, atol=1e-7)
+        again = flat.predict_trees(xs, backend="jax")
+        assert np.array_equal(got, again)          # deterministic reassembly
+        assert db.uploads == 1                     # bank uploaded once
+        # Fused device scoring rides the same sharded staging.
+        host = m.predict(q)
+        dev = m.predict_on_device(np.asarray(q, np.float32))
+        assert np.allclose(dev, host, rtol=1e-3, atol=1e-5)
+        # Small flushes stay unsharded (below SHARD_MIN_ROWS).
+        small = flat.predict_trees(xs[:64], backend="jax")
+        assert np.allclose(small, ref[:64], rtol=1e-4, atol=1e-7)
+        print("SHARDED_FLUSH_OK")
+    """)
+    assert "SHARDED_FLUSH_OK" in out

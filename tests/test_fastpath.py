@@ -293,3 +293,155 @@ class TestProfileSessionFastPath:
             names, vec = featurize(g, node)
             assert op.feature_names == names
             assert op.features == [float(v) for v in vec]
+
+
+# ---------------------------------------------------------------------------
+# Device residency + three-tier backend (PR 6)
+# ---------------------------------------------------------------------------
+
+class TestDeviceResidency:
+    def test_bank_uploaded_once_across_flushes(self):
+        # Satellite regression: predict_trees_jax used to rebuild its
+        # device arrays per ensemble lazily but re-upload x every call
+        # with nothing pinning the bank's lifecycle; now the bank rides
+        # a DeviceBank that survives across flushes.
+        pytest.importorskip("jax")
+        x, y = _data()
+        m = GBDTPredictor(n_stages=10).fit(x, y)
+        flat = m.flat()
+        xs = m.scaler.transform(x)
+        flat.predict_trees(xs, backend="jax")
+        db = flat._device_bank
+        assert db is not None and db.uploads == 1
+        for _ in range(3):
+            flat.predict_trees(xs, backend="jax")
+        # No per-call host→device transfer of bank arrays: same bank
+        # object, upload count pinned at one; only inputs are staged.
+        assert flat._device_bank is db
+        assert db.uploads == 1
+        assert db.inputs_staged == 4
+
+    def test_invalidated_on_refit(self):
+        pytest.importorskip("jax")
+        x, y = _data()
+        m = GBDTPredictor(n_stages=5).fit(x, y)
+        m.flat().predict_trees(m.scaler.transform(x), backend="jax")
+        old = m.flat()._device_bank
+        assert old is not None
+        m.fit(x, y + 1.0)                 # retrain → flat (and bank) drop
+        assert m._flat is None and m._device_scaler is None
+        m.flat().predict_trees(m.scaler.transform(x), backend="jax")
+        assert m.flat()._device_bank is not old
+
+    def test_predict_on_device_matches_host_predict(self):
+        pytest.importorskip("jax")
+        x, y = _data()
+        for m in (GBDTPredictor(n_stages=20).fit(x, y),
+                  RandomForestPredictor(n_trees=6).fit(x, y)):
+            host = m.predict(x)
+            dev = m.predict_on_device(np.asarray(x, np.float32))
+            np.testing.assert_allclose(dev, host, rtol=1e-3, atol=1e-5)
+            assert (dev >= 0).all()
+
+    def test_device_stats_lazy(self):
+        pytest.importorskip("jax")
+        x, y = _data()
+        m = GBDTPredictor(n_stages=5).fit(x, y)
+        assert m.device_stats() is None      # nothing resident yet
+        m.flat().predict_trees(m.scaler.transform(x), backend="jax")
+        st = m.device_stats()
+        assert st is not None and st["uploads"] == 1
+        assert st["n_trees"] == 5 and st["nbytes"] > 0
+
+
+class TestBackendTiers:
+    def test_resolve_three_tiers(self, monkeypatch):
+        pytest.importorskip("jax")
+        from repro.core.predictors import flat as flat_mod
+
+        monkeypatch.setattr(flat_mod, "_pallas_available", lambda: True)
+        assert flat_mod.resolve_backend("auto", 100) == "numpy"
+        assert flat_mod.resolve_backend(
+            "auto", flat_mod.AUTO_JAX_MIN_SLOTS) == "jax"
+        assert flat_mod.resolve_backend(
+            "auto", flat_mod.AUTO_PALLAS_MIN_SLOTS) == "pallas"
+        # Explicit backends pass through untouched.
+        for b in ("numpy", "jax", "pallas"):
+            assert flat_mod.resolve_backend(b, 1) == b
+
+    def test_pallas_tier_needs_compiled_backend(self, monkeypatch):
+        pytest.importorskip("jax")
+        from repro.core.predictors import flat as flat_mod
+
+        monkeypatch.setattr(flat_mod, "_pallas_available", lambda: False)
+        # Without a compiled Pallas backend the top tier degrades to jax
+        # rather than serving through interpret mode.
+        assert flat_mod.resolve_backend(
+            "auto", flat_mod.AUTO_PALLAS_MIN_SLOTS) == "jax"
+
+    def test_pallas_available_env_override(self, monkeypatch):
+        pytest.importorskip("jax")
+        from repro.core.predictors.flat import _pallas_available
+
+        monkeypatch.delenv("REPRO_AUTO_PALLAS", raising=False)
+        assert _pallas_available() is False     # CPU container: no TPU
+        monkeypatch.setenv("REPRO_AUTO_PALLAS", "1")
+        assert _pallas_available() is True
+
+    def test_auto_resolving_to_numpy_is_bit_exact(self):
+        # "auto" must never silently change reports when it resolves to
+        # numpy: small-batch auto == explicit numpy, bit for bit.
+        from repro.pipeline import LatencyService
+
+        graphs = [tiny_graph(f"g{i}", ch=2 * i + 2) for i in range(6)]
+        auto_svc = LatencyService.build(graphs, SETTING,
+                                        predictor="gbdt")
+        assert auto_svc.inference_backend == "auto"
+        np_svc = LatencyService(auto_svc.hub, default_setting=SETTING,
+                                predictor="gbdt", inference_backend="numpy")
+        auto_reports = auto_svc.predict_batch(graphs, SETTING)
+        np_reports = np_svc.predict_batch(graphs, SETTING)
+        for a, b in zip(auto_reports, np_reports):
+            assert a.e2e_s == b.e2e_s
+            assert a.per_op == b.per_op
+        runs = auto_svc.stats()["backend_runs"]
+        assert runs.get("numpy", 0) > 0          # the tier actually ran
+        assert runs.get("jax", 0) == 0
+        assert runs.get("pallas", 0) == 0
+
+
+class TestServiceDevicePath:
+    def _service(self):
+        from repro.pipeline import LatencyService
+
+        graphs = [tiny_graph(f"g{i}", ch=2 * i + 2) for i in range(6)]
+        svc = LatencyService.build(graphs, SETTING, predictor="gbdt")
+        return svc, graphs
+
+    def test_fused_device_flush(self, monkeypatch):
+        pytest.importorskip("jax")
+        from repro.core.predictors import flat as flat_mod
+
+        svc, graphs = self._service()
+        np_reports = svc.predict_batch(graphs, SETTING)
+        svc.clear_cache()
+        # Force the jax tier for any batch size: the flush must route
+        # through the fused device path (tallied separately) and stay
+        # close to the float64 host reports.
+        monkeypatch.setattr(flat_mod, "AUTO_JAX_MIN_SLOTS", 1)
+        dev_reports = svc.predict_batch(graphs, SETTING)
+        stats = svc.stats()
+        assert stats["backend_runs"].get("jax", 0) > 0
+        assert stats["device_fused_runs"] > 0
+        for a, b in zip(dev_reports, np_reports):
+            np.testing.assert_allclose(a.e2e_s, b.e2e_s,
+                                       rtol=1e-3, atol=1e-6)
+        res = stats["device_residency"]
+        assert res["banks"] > 0 and res["bytes"] > 0
+        assert res["lifetime"]["banks_built"] >= res["banks"]
+
+    def test_stats_report_residency_without_device_use(self):
+        svc, graphs = self._service()
+        svc.predict_batch(graphs, SETTING)       # numpy tier only
+        res = svc.stats()["device_residency"]
+        assert res["banks"] == 0 and res["bytes"] == 0

@@ -151,3 +151,76 @@ class TestFlattenedParity:
         t = RegressionTree().fit(x, y)
         assert t.flat().max_depth == 0
         assert np.array_equal(t.predict(x), np.full(10, 7.0))
+
+
+class TestBackendParity:
+    """numpy / jax / pallas(interpret) agreement on random banks.
+
+    The device tiers run float32 while numpy runs float64, so two error
+    sources exist: leaf-value rounding (bounded by the documented
+    rtol=1e-4 tolerance) and ROUTING divergence when a query lands
+    within float32 epsilon of a split threshold (a near-tie).  The
+    property: every row either agrees within tolerance, or the bank
+    provably contains a near-tie for that row — float32 disagreement is
+    only ever tie-breaking, never wrong traversal.
+    """
+
+    # Fixed shapes keep jit/interpret caches warm across examples.
+    N_ROWS, N_DIMS, N_STAGES = 24, 4, 5
+
+    def _bank(self, seed):
+        pytest.importorskip("jax")
+        rng = np.random.default_rng(seed)
+        x = np.abs(rng.standard_normal((80, self.N_DIMS))) * 10
+        y = x @ rng.random(self.N_DIMS) + 0.1
+        m = GBDTPredictor(n_stages=self.N_STAGES, max_depth=3).fit(x, y)
+        return m, rng
+
+    @staticmethod
+    def _near_tie(flat, xs, row, rel=8 * np.finfo(np.float32).eps):
+        internal = flat.feature >= 0
+        f = flat.feature[internal]
+        thr = flat.threshold[internal]
+        gap = np.abs(xs[row, f] - thr)
+        return bool((gap <= rel * np.maximum(1.0, np.abs(thr))).any())
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_backends_agree_or_near_tie(self, seed):
+        m, rng = self._bank(seed)
+        flat = m.flat()
+        xs = m.scaler.transform(
+            np.abs(rng.standard_normal((self.N_ROWS, self.N_DIMS))) * 10)
+        # Plant near-ties: aim half the rows directly at split
+        # thresholds so tie-handling is exercised, not just sampled.
+        internal = flat.feature >= 0
+        if internal.any():
+            nodes = np.flatnonzero(internal)
+            for row in range(0, self.N_ROWS, 2):
+                j = nodes[rng.integers(len(nodes))]
+                xs[row, flat.feature[j]] = flat.threshold[j]
+        ref = flat.predict_trees(xs, backend="numpy")
+        jx = flat.predict_trees(xs, backend="jax")
+        pls = flat.predict_trees(xs, backend="pallas")
+        # The two float32 tiers share math and compare form: identical.
+        assert np.array_equal(jx, pls)
+        ok = np.isclose(jx, ref, rtol=2e-4, atol=1e-6).all(axis=1)
+        for row in np.flatnonzero(~ok):
+            assert self._near_tie(flat, xs, row), (
+                f"row {row} disagrees with no near-tie threshold")
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_f32_representable_inputs_route_identically(self, seed):
+        # When inputs and thresholds are exactly float32-representable,
+        # routing cannot diverge: parity becomes (near-)exact equality
+        # of the selected leaf values after one f64→f32 rounding.
+        m, rng = self._bank(seed + 31337)
+        flat = m.flat()
+        flat.threshold = flat.threshold.astype(np.float32).astype(np.float64)
+        xs = m.scaler.transform(
+            np.abs(rng.standard_normal((self.N_ROWS, self.N_DIMS))) * 10)
+        xs = xs.astype(np.float32).astype(np.float64)
+        ref = flat.predict_trees(xs, backend="numpy")
+        jx = flat.predict_trees(xs, backend="jax")
+        np.testing.assert_allclose(jx, ref, rtol=1e-6, atol=1e-7)
