@@ -10,7 +10,12 @@ phases and against direct single-threaded `predict_e2e` — the speedup
 is pure call-amortization, not precision drift.  Reported per phase:
 requests/sec, p50/p99 request latency, batches and average batch size.
 
-A third "auto backend under load" phase scores NAS-scale batches
+A "degraded mode" phase re-runs the batched workload under a seeded
+chaos plan (10% of flushes fail with retryable E_UNAVAILABLE) with
+clients retrying until success, and reports throughput/p99 retained
+versus the clean run — answers stay bit-identical either way.
+
+A further "auto backend under load" phase scores NAS-scale batches
 (``max_batch`` in the hundreds) under ``inference_backend="auto"`` and
 reports the `backend_runs` mix — full runs cross the 2¹⁶ row×tree
 threshold, so the jax gather kernel engages exactly as PR 4's
@@ -36,6 +41,8 @@ from repro.core.nas_space import NASSpaceConfig, sample_architecture
 from repro.core.profiler import DeviceSetting
 from repro.pipeline import LatencyService, PredictorHub, ProfileStore
 from repro.rpc.batcher import BatchPolicy, MicroBatcher, MonotonicClock
+from repro.rpc.chaos import FaultPlan, FaultSpec
+from repro.rpc.protocol import E_UNAVAILABLE, RPCError
 from repro.transfer import CostModelProfileSession
 from benchmarks.common import emit_bench_json, emit_csv
 
@@ -96,6 +103,70 @@ def drive(service: LatencyService, graphs, policy: BatchPolicy,
     batcher.close()
     assert stats["answered"] == len(graphs) and stats["failed"] == 0
     return wall, np.asarray(lat), stats, out
+
+
+def drive_degraded(service: LatencyService, graphs, policy: BatchPolicy,
+                   fault_rate: float, seed: int = 1234,
+                   window: int = WINDOW):
+    """Like `drive`, but the batcher runs under a seeded chaos plan that
+    fails ``fault_rate`` of flushes with a retryable E_UNAVAILABLE, and
+    each client retries (bounded resubmit) until its request succeeds —
+    the resilience loop a production client runs via RetryPolicy.
+    Returns (wall_s, latencies, stats, reports, retries, injected)."""
+    service.clear_cache()
+    plan = None
+    if fault_rate > 0.0:
+        plan = FaultPlan(seed, [FaultSpec(site="flush", kind="error",
+                                          rate=fault_rate,
+                                          code=E_UNAVAILABLE,
+                                          message="injected degradation",
+                                          retryable=True)])
+    batcher = MicroBatcher(service, policy,
+                           clock=MonotonicClock(tick_s=1e-3), chaos=plan)
+    index_chunks = [list(range(len(graphs)))[i::CONCURRENCY]
+                    for i in range(CONCURRENCY)]
+    lat = [0.0] * len(graphs)
+    out = [None] * len(graphs)
+    retries = [0] * CONCURRENCY
+    barrier = threading.Barrier(CONCURRENCY + 1)
+
+    def worker(tid):
+        barrier.wait()
+        mine = index_chunks[tid]
+        for j in range(0, len(mine), window):
+            futs = []
+            for idx in mine[j:j + window]:
+                futs.append((idx, time.perf_counter(),
+                             batcher.submit(graphs[idx])))
+            for idx, t0, fut in futs:
+                for _attempt in range(32):      # bounded retry budget
+                    try:
+                        out[idx] = fut.result(60)
+                        break
+                    except RPCError as exc:
+                        if not exc.retryable:
+                            raise
+                        retries[tid] += 1
+                        fut = batcher.submit(graphs[idx])
+                else:
+                    raise AssertionError("retry budget exhausted")
+                lat[idx] = time.perf_counter() - t0
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(CONCURRENCY)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    stats = batcher.stats()
+    batcher.close()
+    injected = plan.injected() if plan is not None else {}
+    assert stats["answered"] == len(graphs), \
+        "every request must eventually be answered despite injected faults"
+    return wall, np.asarray(lat), stats, out, sum(retries), injected
 
 
 def run(smoke: bool = False) -> None:
@@ -162,6 +233,47 @@ def run(smoke: bool = False) -> None:
     assert speedup >= 5.0, \
         f"batched serving must be >=5x unbatched, got {speedup:.2f}x"
 
+    # -- degraded mode: 10% of flushes fail, clients retry -------------------
+    # Same batched policy, same graphs; a seeded FaultPlan fails 10% of
+    # flushes with a retryable E_UNAVAILABLE and every client resubmits
+    # until it succeeds.  The clean/degraded delta is the price of fault
+    # recovery (wasted flush work + retry round-trips), with correctness
+    # pinned: every report still bit-identical to predict_e2e.
+    fault_rate = 0.10
+    # Small flush cap so the fault site is exercised dozens of times per
+    # run: 256 requests / max_batch=8 → >=32 flushes, and seed 1234's
+    # deterministic schedule injects within the first 6 of them.
+    degraded_policy = BatchPolicy(max_batch=8, max_wait_ticks=2,
+                                  max_queue=100_000)
+    wall_c, lat_c, _, _, _, _ = drive_degraded(
+        service, graphs, degraded_policy, fault_rate=0.0)
+    wall_d, lat_d, st_d, out_d, n_retries, injected = drive_degraded(
+        service, graphs, degraded_policy, fault_rate=fault_rate)
+    for g, rep in zip(graphs, out_d):
+        ref = reference[g.fingerprint()]
+        assert rep.fingerprint == g.fingerprint()
+        assert rep.e2e_s == ref.e2e_s, \
+            "degraded-mode answers must stay bit-identical"
+    thr_c, thr_d = n_requests / wall_c, n_requests / wall_d
+    degraded = {
+        "fault_rate": fault_rate,
+        "injected_flush_errors": injected.get("flush/error", 0),
+        "client_retries": n_retries,
+        "failed_attempts": st_d["failed"],
+        "clean_req_per_s": round(thr_c, 1),
+        "degraded_req_per_s": round(thr_d, 1),
+        "clean_p99_ms": round(1e3 * float(np.percentile(lat_c, 99)), 3),
+        "degraded_p99_ms": round(1e3 * float(np.percentile(lat_d, 99)), 3),
+        "throughput_retained": round(thr_d / thr_c, 3),
+    }
+    emit_csv("bench_rpc_degraded", [degraded])
+    print(f"# degraded mode ({fault_rate:.0%} flush faults): "
+          f"{thr_d:.0f} req/s vs {thr_c:.0f} clean "
+          f"({degraded['throughput_retained']:.0%} retained, "
+          f"{n_retries} retries)")
+    assert degraded["injected_flush_errors"] > 0, \
+        "chaos plan must actually fire at 10% over hundreds of flushes"
+
     # -- auto backend under NAS-scale load -----------------------------------
     n_load = 256 if smoke else 1024
     batch_cap = 256 if smoke else 1024
@@ -208,6 +320,7 @@ def run(smoke: bool = False) -> None:
         "device_fused_runs": auto_stats["device_fused_runs"],
         "device_residency": auto_stats["device_residency"],
         "max_abs_delta_vs_numpy_s": float(np.max(deltas)),
+        "degraded_mode": degraded,
     })
     if not smoke:
         assert runs.get("jax", 0) > 0, \

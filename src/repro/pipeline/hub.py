@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional, Sequence, Tuple
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 from repro.core.composition import PredictorBank
 from repro.core.profiler import DeviceSetting
@@ -40,6 +41,15 @@ class PredictorHub:
         # Bumped on every (re)train so caches keyed on hub output —
         # LatencyService's report LRU — know to invalidate.
         self.version = 0
+        # Rollover bookkeeping: every install (train/register/swap)
+        # stamps its bank with the next hub-wide epoch, so a serving
+        # report can attribute which generation of a bank answered it
+        # (banks only read from disk keep epoch 0 — they predate the
+        # hub's lifetime).  Guarded by _lock together with version so
+        # (bank, epoch) snapshots are consistent under rollover.
+        self.epoch = 0
+        self.bank_epochs: Dict[Tuple[str, str], int] = {}
+        self._lock = threading.Lock()
         # Training-dataset assembly cache: training several families on
         # the same (setting, split) reuses one LatencyDataset (and its
         # one-pass per-type tables) instead of re-reading the store.
@@ -95,13 +105,22 @@ class PredictorHub:
                                   min_samples=min_samples, seed=seed,
                                   overhead_model=overhead_model)
         key = (setting_key(setting), family)
-        self.banks[key] = bank
-        self.version += 1
+        self._install(key, bank)
         log.info("trained %s bank for %s on %d archs (%d op types)",
                  family, key[0], len(ds.archs), len(bank.predictors))
         if save and self.root:
             self.save_bank(setting, family)
         return bank
+
+    def _install(self, key: Tuple[str, str], bank: PredictorBank) -> int:
+        """Atomically publish ``bank`` under ``key``: bump version (so
+        serving caches invalidate) and stamp the next epoch."""
+        with self._lock:
+            self.banks[key] = bank
+            self.version += 1
+            self.epoch += 1
+            self.bank_epochs[key] = self.epoch
+            return self.epoch
 
     def register(self, setting: DeviceSetting, family: str,
                  bank: PredictorBank, *, save: bool = False) -> PredictorBank:
@@ -109,13 +128,32 @@ class PredictorHub:
         one) under ``(setting, family)``; bumps the version so service
         caches invalidate, and optionally persists it under ``root``."""
         key = (setting_key(setting), family)
-        self.banks[key] = bank
-        self.version += 1
+        self._install(key, bank)
         log.info("registered %s bank for %s (%d op types)",
                  family, key[0], len(bank.predictors))
         if save and self.root:
             self._write_bank(key[0], family, bank)
         return bank
+
+    def swap_bank(self, setting: Union[DeviceSetting, str], family: str,
+                  bank: PredictorBank, *, save: bool = False) -> int:
+        """Zero-downtime rollover: atomically replace the served bank
+        for (setting, family) and return the new bank epoch.
+
+        New predictions resolve the new bank immediately; flushes
+        already in flight finish against the bank object they snapshot
+        at admission (their reports keep the old epoch), so no request
+        is lost or double-answered across the swap.  ``setting`` may be
+        a `DeviceSetting` or a canonical setting-key string.
+        """
+        skey = setting if isinstance(setting, str) else setting_key(setting)
+        key = (skey, family)
+        epoch = self._install(key, bank)
+        log.info("rolled over %s bank for %s -> epoch %d (%d op types)",
+                 family, skey, epoch, len(bank.predictors))
+        if save and self.root:
+            self._write_bank(skey, family, bank)
+        return epoch
 
     # -- lookup --------------------------------------------------------------
     def get(self, setting: DeviceSetting, family: str = "gbdt"
@@ -130,6 +168,39 @@ class PredictorHub:
                     bank = PredictorBank.from_json(json.load(f))
                 self.banks[key] = bank
         return bank
+
+    def get_with_epoch(self, setting: Union[DeviceSetting, str],
+                       family: str = "gbdt"
+                       ) -> Tuple[Optional[PredictorBank], int]:
+        """(bank, its epoch) as one consistent snapshot — the pair a
+        serving flush must hold onto across a concurrent `swap_bank`."""
+        skey = setting if isinstance(setting, str) else setting_key(setting)
+        key = (skey, family)
+        with self._lock:
+            bank = self.banks.get(key)
+            if bank is not None:
+                return bank, self.bank_epochs.get(key, 0)
+        if isinstance(setting, str):
+            return None, 0
+        bank = self.get(setting, family)           # may load from disk
+        with self._lock:
+            return bank, self.bank_epochs.get(key, 0)
+
+    def epoch_of(self, setting: Union[DeviceSetting, str],
+                 family: str = "gbdt") -> int:
+        skey = setting if isinstance(setting, str) else setting_key(setting)
+        with self._lock:
+            return self.bank_epochs.get((skey, family), 0)
+
+    def epochs(self) -> Dict[str, Dict[str, int]]:
+        """``{setting key: {family: epoch}}`` for every in-memory bank
+        (epoch 0 = loaded from disk, never rolled over in this hub)."""
+        with self._lock:
+            out: Dict[str, Dict[str, int]] = {}
+            for (skey, family) in self.banks:
+                out.setdefault(skey, {})[family] = \
+                    self.bank_epochs.get((skey, family), 0)
+            return out
 
     # -- persistence ---------------------------------------------------------
     def _write_bank(self, key: str, family: str, bank: PredictorBank) -> str:

@@ -69,6 +69,10 @@ class PredictionReport:
     num_ops: int
     num_kernels: int
     from_cache: bool = False
+    # Which generation of the bank answered (PredictorHub epoch stamped
+    # at train/register/swap_bank) — under a live rollover, in-flight
+    # flushes report the old epoch, post-swap admissions the new one.
+    bank_epoch: int = 0
 
     def to_json(self) -> Dict[str, Any]:
         return {
@@ -78,6 +82,7 @@ class PredictionReport:
             "num_ops": self.num_ops, "num_kernels": self.num_kernels,
             "per_op": [list(p) for p in self.per_op],
             "from_cache": self.from_cache,
+            "bank_epoch": self.bank_epoch,
         }
 
     @classmethod
@@ -92,6 +97,7 @@ class PredictionReport:
             overhead_s=float(d["overhead_s"]),
             num_ops=int(d["num_ops"]), num_kernels=int(d["num_kernels"]),
             from_cache=bool(d.get("from_cache", False)),
+            bank_epoch=int(d.get("bank_epoch", 0)),
         )
 
 
@@ -186,13 +192,17 @@ class LatencyService:
             raise ValueError("no DeviceSetting given and no default set")
         return setting
 
-    def _bank(self, setting: DeviceSetting, family: str) -> PredictorBank:
-        bank = self.hub.get(setting, family)
+    def _bank(self, setting: DeviceSetting, family: str
+              ) -> Tuple[PredictorBank, int]:
+        """(bank, epoch) snapshot — a flush holds this pair for its whole
+        lifetime, so a concurrent `swap_bank` never splits a batch
+        across bank generations."""
+        bank, epoch = self.hub.get_with_epoch(setting, family)
         if bank is None:
             raise KeyError(
                 f"no trained bank for ({setting_key(setting)}, {family}) — "
                 f"call PredictorHub.train or LatencyService.build first")
-        return bank
+        return bank, epoch
 
     def predict_e2e(self, graph: OpGraph,
                     setting: Optional[DeviceSetting] = None,
@@ -232,7 +242,7 @@ class LatencyService:
         if not fresh:
             return out  # type: ignore[return-value]
 
-        bank = self._bank(setting, family)
+        bank, bank_epoch = self._bank(setting, family)
         # Fused-mode scenarios are profiled (and therefore predicted) on
         # the fused graph — same rewrite GraphExecutor applies.
         exec_graphs = []
@@ -276,6 +286,7 @@ class LatencyService:
                 predictor=family, e2e_s=float(total),
                 per_op=tuple(ops), overhead_s=float(overhead),
                 num_ops=g.num_ops(), num_kernels=len(eg.nodes),
+                bank_epoch=bank_epoch,
             )
             with self._lock:
                 # Don't poison a cache another thread just cleared on a
@@ -406,6 +417,12 @@ class LatencyService:
         return preds
 
     # -- introspection -------------------------------------------------------
+    def bank_epochs(self) -> Dict[str, Dict[str, int]]:
+        """Per-bank rollover epochs (`PredictorHub.epochs`) — surfaced
+        through the RPC ``health`` endpoint so a fleet can verify a
+        `swap_bank` actually landed on every serving worker."""
+        return self.hub.epochs()
+
     def available(self) -> List[Tuple[str, str]]:
         """(setting key, family) of every in-memory bank — the scenarios
         this service can answer for right now (transfer-registered
@@ -470,6 +487,7 @@ class LatencyService:
                 "inference_backend": self.inference_backend,
                 "backend_runs": dict(self.backend_runs),
                 "device_fused_runs": self.device_fused_runs,
+                "hub_epoch": self.hub.epoch,
             }
         # Outside the counter lock: walks hub banks (its own structures).
         out["device_residency"] = self.device_residency()

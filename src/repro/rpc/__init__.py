@@ -5,25 +5,35 @@ stack: many concurrent single-graph requests coalesce in a
 deterministic micro-batching queue into the batched compiled fast
 path, over a versioned JSON-lines protocol with typed error envelopes:
 
-    protocol — wire format v1: requests/responses, error codes,
-               graph/setting/report (de)serialization
-    batcher  — `MicroBatcher` + `BatchPolicy` + injectable clocks
-               (`MonotonicClock`, `ManualClock`)
-    server   — `LatencyRPCServer`: threaded TCP / stream transports,
-               search-front endpoint
-    client   — `LatencyClient`: pipelined, thread-safe, service-shaped
+    protocol   — wire format v1: requests/responses, error codes,
+                 graph/setting/report (de)serialization
+    batcher    — `MicroBatcher` + `BatchPolicy` (tiered load shedding)
+                 + injectable clocks (`MonotonicClock`, `ManualClock`)
+    server     — `LatencyRPCServer`: threaded TCP / stream transports,
+                 search-front + health + rollover endpoints
+    client     — `LatencyClient`: pipelined, thread-safe, service-shaped,
+                 auto-reconnecting
+    resilience — `RetryPolicy` (deterministic seeded backoff),
+                 `CircuitBreaker`, `retry_call`
+    chaos      — `FaultPlan`/`FaultSpec`: seeded, replayable fault
+                 injection into dispatch, flush, and transport
 """
 from repro.rpc.batcher import (BatchPolicy, ManualClock, MicroBatcher,
                                MonotonicClock, PendingResult)
+from repro.rpc.chaos import (FaultPlan, FaultSpec, SITE_DISPATCH, SITE_FLUSH,
+                             SITE_TRANSPORT)
 from repro.rpc.client import LatencyClient
 from repro.rpc.protocol import (PROTOCOL_VERSION, Request, Response, RPCError,
                                 decode_request, decode_response,
                                 encode_request, encode_response)
+from repro.rpc.resilience import CircuitBreaker, RetryPolicy, retry_call
 from repro.rpc.server import LatencyRPCServer
 
 __all__ = [
-    "BatchPolicy", "LatencyClient", "LatencyRPCServer", "ManualClock",
-    "MicroBatcher", "MonotonicClock", "PROTOCOL_VERSION", "PendingResult",
-    "RPCError", "Request", "Response", "decode_request", "decode_response",
-    "encode_request", "encode_response",
+    "BatchPolicy", "CircuitBreaker", "FaultPlan", "FaultSpec",
+    "LatencyClient", "LatencyRPCServer", "ManualClock", "MicroBatcher",
+    "MonotonicClock", "PROTOCOL_VERSION", "PendingResult", "RPCError",
+    "Request", "Response", "RetryPolicy", "SITE_DISPATCH", "SITE_FLUSH",
+    "SITE_TRANSPORT", "decode_request", "decode_response", "encode_request",
+    "encode_response", "retry_call",
 ]

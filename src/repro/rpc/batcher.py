@@ -170,11 +170,26 @@ class PendingResult:
 
 @dataclass(frozen=True)
 class BatchPolicy:
-    """Flush/admission knobs (see module docstring)."""
+    """Flush/admission knobs (see module docstring).
+
+    Tiered load shedding: below ``shed_frac * max_queue`` queued
+    requests everything is admitted (tier ``accept``).  At or above the
+    watermark, fresh work is shed with a retryable ``overloaded`` while
+    report-cache hits are still answered (tier ``cache_only`` — they
+    cost no queue space).  If, while shed, the oldest queued request is
+    overdue by more than ``shed_reject_ticks`` past its flush deadline
+    — the queue is not just full but *stuck* — even cache lookups are
+    skipped and every submit is rejected outright (tier ``reject``).
+    Defaults (``shed_frac=1.0``, ``shed_reject_ticks=None``) reproduce
+    the original single-cliff behavior exactly.
+    """
 
     max_batch: int = 32        # flush a group at this many requests
     max_wait_ticks: int = 2    # ... or when its oldest waited this long
     max_queue: int = 1024      # total queued requests before admission fails
+    shed_frac: float = 1.0     # queue-fill watermark for the cache_only tier
+    shed_reject_ticks: Optional[int] = None   # head-of-line overdue-age
+    #                            escalation to the reject tier (None = never)
 
     def __post_init__(self) -> None:
         if self.max_batch < 1:
@@ -183,6 +198,10 @@ class BatchPolicy:
             raise ValueError("max_wait_ticks must be >= 0")
         if self.max_queue < 1:
             raise ValueError("max_queue must be >= 1")
+        if not 0.0 < self.shed_frac <= 1.0:
+            raise ValueError("shed_frac must be in (0, 1]")
+        if self.shed_reject_ticks is not None and self.shed_reject_ticks < 0:
+            raise ValueError("shed_reject_ticks must be >= 0")
 
 
 @dataclass
@@ -204,10 +223,15 @@ class MicroBatcher:
     """
 
     def __init__(self, service: Any, policy: Optional[BatchPolicy] = None, *,
-                 clock: Optional[Any] = None, auto_start: bool = True):
+                 clock: Optional[Any] = None, auto_start: bool = True,
+                 chaos: Optional[Any] = None):
         self.service = service
         self.policy = policy or BatchPolicy()
         self.clock = clock or MonotonicClock()
+        # Optional `repro.rpc.chaos.FaultPlan` — consulted once per
+        # flush ("flush" site) to inject batch-wide errors, delays, and
+        # wedges for the fault-tolerance suite.
+        self.chaos = chaos
         self._cond = threading.Condition()
         # (setting key, family) → FIFO of entries awaiting a flush.
         self._groups: "OrderedDict[Tuple[str, str], Deque[_Entry]]" = OrderedDict()
@@ -219,6 +243,9 @@ class MicroBatcher:
         self.answered = 0
         self.failed = 0
         self.rejected = 0
+        self.shed_cache_only = 0    # fresh work shed in the cache_only tier
+        self.shed_rejected = 0      # everything shed in the reject tier
+        self.wedged_flushes = 0     # chaos-wedged batches (requeued, retried)
         self.short_circuits = 0
         self.batches = 0
         self.batched_requests = 0
@@ -237,14 +264,29 @@ class MicroBatcher:
             self._worker.start()
 
     # -- submission -----------------------------------------------------------
+    def _shed_tier_locked(self, now: int) -> str:
+        """Current degradation tier (caller holds ``_cond``)."""
+        if self._queued < self.policy.max_queue * self.policy.shed_frac:
+            return "accept"
+        if self.policy.shed_reject_ticks is not None:
+            heads = [q[0].deadline for q in self._groups.values() if q]
+            if heads and now - min(heads) > self.policy.shed_reject_ticks:
+                return "reject"        # shed AND the queue is stuck
+        return "cache_only"
+
+    def shed_tier(self) -> str:
+        with self._cond:
+            return self._shed_tier_locked(self.clock.now())
+
     def submit(self, graph: OpGraph,
                setting: Optional[DeviceSetting] = None,
                predictor: Optional[str] = None) -> PendingResult:
         """Enqueue one request; returns its future.
 
         Raises `RPCError` synchronously for admission failures
-        (``overloaded``), unknown settings, or a closed batcher — the
-        request was never accepted, so there is nothing to await.
+        (``overloaded``, per the shedding tiers of `BatchPolicy`),
+        unknown settings, or a closed batcher — the request was never
+        accepted, so there is nothing to await.
         """
         setting = setting or getattr(self.service, "default_setting", None)
         if setting is None:
@@ -252,6 +294,20 @@ class MicroBatcher:
                            "no device setting given and the service has "
                            "no default", retryable=False)
         family = predictor or self.service.predictor
+        with self._cond:
+            if self._closed:
+                raise RPCError(E_UNAVAILABLE, "batcher is closed")
+            tier = self._shed_tier_locked(self.clock.now())
+            if tier == "reject":
+                # Deep overload with a stalled queue: reject before even
+                # touching the report cache — the cheapest possible "no".
+                self.rejected += 1
+                self.shed_rejected += 1
+                raise RPCError(
+                    E_OVERLOADED,
+                    f"shedding all work (tier reject: {self._queued}/"
+                    f"{self.policy.max_queue} queued and head-of-line "
+                    f"stalled)")
         # Cache short-circuit: answered before admission, so repeats of
         # a hot graph neither queue nor count against max_queue.
         hit = self.service.cache_peek(graph, setting, family)
@@ -269,7 +325,16 @@ class MicroBatcher:
         with self._cond:
             if self._closed:
                 raise RPCError(E_UNAVAILABLE, "batcher is closed")
-            if self._queued >= self.policy.max_queue:
+            tier = self._shed_tier_locked(self.clock.now())
+            if tier != "accept":
+                self.rejected += 1
+                self.shed_cache_only += 1
+                raise RPCError(
+                    E_OVERLOADED,
+                    f"shedding fresh work (tier {tier}: {self._queued}/"
+                    f"{self.policy.max_queue} requests pending; cached "
+                    f"graphs still served)")
+            if self._queued >= self.policy.max_queue:   # hard backstop
                 self.rejected += 1
                 raise RPCError(
                     E_OVERLOADED,
@@ -305,8 +370,38 @@ class MicroBatcher:
         self._queued -= len(batch)
         return batch
 
-    def _flush(self, batch: List[_Entry]) -> None:
-        """One `predict_batch` for one group batch; resolve positionally."""
+    def _requeue(self, batch: List[_Entry]) -> None:
+        """Put a wedged batch back at the head of its group, original
+        order, unresolved — it is due again on the next flush round."""
+        key = (setting_key(batch[0].setting), batch[0].family)
+        with self._cond:
+            q = self._groups.setdefault(key, deque())
+            q.extendleft(reversed(batch))
+            self._queued += len(batch)
+            self.wedged_flushes += 1
+            self._cond.notify_all()
+
+    def _flush(self, batch: List[_Entry]) -> int:
+        """One `predict_batch` for one group batch; resolve positionally.
+        Returns the number of requests settled (0 if the flush wedged
+        and the batch was requeued)."""
+        if self.chaos is not None:
+            fault = self.chaos.decide("flush")
+            if fault is not None:
+                if fault.kind == "wedge":
+                    self._requeue(batch)
+                    return 0
+                if fault.kind == "delay":
+                    time.sleep(fault.delay_s)
+                elif fault.kind == "error":
+                    err = fault.to_error()
+                    with self._cond:
+                        self.batches += 1
+                        self.batched_requests += len(batch)
+                        self.failed += len(batch)
+                    for e in batch:
+                        e.pending._fail(err)
+                    return len(batch)
         graphs = [e.graph for e in batch]
         # Per-flush backend attribution: diff the service's resolved-
         # backend tally around the call.  (With overlapping flushes a
@@ -351,11 +446,14 @@ class MicroBatcher:
         else:
             for e, r in zip(batch, reports):
                 e.pending._resolve(r)
+        return len(batch)
 
     def run_pending(self, force: bool = False) -> int:
         """Flush every due group (all groups if ``force``); returns the
         number of requests answered/failed.  One batch per group per
-        round, rounds repeated until nothing is due."""
+        round, rounds repeated until nothing is due or a round makes no
+        progress (every due batch chaos-wedged back onto its queue —
+        those retry on the *next* pump instead of spinning here)."""
         served = 0
         while True:
             with self._cond:
@@ -364,9 +462,12 @@ class MicroBatcher:
             batches = [b for b in batches if b]
             if not batches:
                 return served
+            progress = 0
             for b in batches:
-                self._flush(b)
-                served += len(b)
+                progress += self._flush(b)
+            served += progress
+            if progress == 0:
+                return served
 
     def flush_all(self) -> int:
         """Drain everything immediately, deadlines notwithstanding."""
@@ -393,13 +494,24 @@ class MicroBatcher:
                         self._cond,
                         self._next_deadline_ticks(self.clock.now()))
                 closed = self._closed
-            self.run_pending(force=closed)
+            progress = self.run_pending(force=closed)
             if closed:
                 return
+            if progress == 0:
+                # Every due batch wedged (chaos): back off one tick so a
+                # rate-1.0 wedge plan retries instead of spinning the CPU.
+                with self._cond:
+                    if not self._closed:
+                        self.clock.wait(self._cond, 1)
 
     # -- lifecycle / introspection -------------------------------------------
     def close(self) -> None:
-        """Stop accepting work, drain the queue, stop the worker."""
+        """Stop accepting work, drain the queue, stop the worker.
+
+        Exactly-once holds through shutdown: anything still queued after
+        the final drain (possible only when a chaos wedge plan keeps
+        re-queuing its batches) fails with a typed retryable
+        ``unavailable`` instead of leaving callers blocked forever."""
         with self._cond:
             if self._closed:
                 return
@@ -409,6 +521,14 @@ class MicroBatcher:
             self._worker.join(timeout=10)
         else:
             self.run_pending(force=True)
+        with self._cond:
+            leftovers = [e for q in self._groups.values() for e in q]
+            self._groups.clear()
+            self._queued = 0
+            self.failed += len(leftovers)
+        err = RPCError(E_UNAVAILABLE, "batcher closed before flush")
+        for e in leftovers:
+            e.pending._fail(err)
 
     def __enter__(self) -> "MicroBatcher":
         return self
@@ -427,6 +547,10 @@ class MicroBatcher:
                 "answered": self.answered,
                 "failed": self.failed,
                 "rejected": self.rejected,
+                "shed_tier": self._shed_tier_locked(self.clock.now()),
+                "shed_cache_only": self.shed_cache_only,
+                "shed_rejected": self.shed_rejected,
+                "wedged_flushes": self.wedged_flushes,
                 "short_circuits": self.short_circuits,
                 "batches": self.batches,
                 "batched_requests": self.batched_requests,
@@ -437,7 +561,9 @@ class MicroBatcher:
                 "queued": self._queued,
                 "policy": {"max_batch": self.policy.max_batch,
                            "max_wait_ticks": self.policy.max_wait_ticks,
-                           "max_queue": self.policy.max_queue},
+                           "max_queue": self.policy.max_queue,
+                           "shed_frac": self.policy.shed_frac,
+                           "shed_reject_ticks": self.policy.shed_reject_ticks},
             }
 
 

@@ -24,6 +24,9 @@ Methods (params → result):
     available      {} → {banks: [[skey, family], ...]}
     stats          {} → {server, batcher, service}
     search_front   {setting?, budget_s?, limit?} → {setting, total, members}
+    health         {} → {status, shed_tier, queued, queue_capacity,
+                         hub_epoch, bank_epochs}
+    rollover       {setting, family?, bank} → {setting, family, epoch}
 
 Graphs travel as `OpGraph.to_json()`; device settings as either their
 canonical key string (``"device:dtype/mode"`` / ``"dtype/mode"``) or a
@@ -45,7 +48,8 @@ from repro.pipeline.store import setting_key
 
 PROTOCOL_VERSION = 1
 
-METHODS = ("predict", "predict_multi", "available", "stats", "search_front")
+METHODS = ("predict", "predict_multi", "available", "stats", "search_front",
+           "health", "rollover")
 
 # -- typed error codes --------------------------------------------------------
 E_BAD_REQUEST = "bad_request"          # malformed JSON / missing fields

@@ -25,8 +25,10 @@ import json
 import queue
 import socket
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.composition import PredictorBank
 from repro.rpc.batcher import BatchPolicy, MicroBatcher, PendingResult
 from repro.rpc.protocol import (E_BAD_REQUEST, E_INTERNAL, E_UNAVAILABLE,
                                 E_UNKNOWN_METHOD, E_UNKNOWN_SETTING,
@@ -82,10 +84,18 @@ class LatencyRPCServer:
                  batcher: Optional[MicroBatcher] = None,
                  auto_start_batcher: bool = True,
                  search_report: Any = None,
+                 chaos: Optional[Any] = None,
                  host: str = "127.0.0.1", port: int = 0):
         self.service = service
+        # Optional `repro.rpc.chaos.FaultPlan`: consulted per dispatch
+        # ("dispatch" site: injected error envelopes / latency spikes)
+        # and per response write ("transport" site: dropped
+        # connections).  A server-owned batcher shares the same plan
+        # for its "flush" site.
+        self.chaos = chaos
         self.batcher = batcher or MicroBatcher(
-            service, policy, clock=clock, auto_start=auto_start_batcher)
+            service, policy, clock=clock, auto_start=auto_start_batcher,
+            chaos=chaos)
         self._owns_batcher = batcher is None
         self.host, self.port = host, int(port)
         self._sock: Optional[socket.socket] = None
@@ -122,6 +132,16 @@ class LatencyRPCServer:
         """Route one decoded request; ``respond`` is called exactly once
         (possibly later, from a batcher flush, for ``predict``)."""
         try:
+            if self.chaos is not None:
+                fault = self.chaos.decide("dispatch")
+                if fault is not None:
+                    if fault.kind == "error":
+                        self._count_error()
+                        respond(Response(id=req.id, ok=False,
+                                         error=fault.to_error()))
+                        return
+                    if fault.kind == "delay":
+                        time.sleep(fault.delay_s)
             if req.method == "predict":
                 self._predict_async(req, respond)
                 return
@@ -130,6 +150,8 @@ class LatencyRPCServer:
                 "available": self._available,
                 "stats": self._stats,
                 "search_front": self._search_front,
+                "health": self._health,
+                "rollover": self._rollover,
             }.get(req.method)
             if handler is None:
                 known = ", ".join(METHODS)
@@ -140,7 +162,11 @@ class LatencyRPCServer:
         except RPCError as exc:
             self._count_error()
             respond(Response(id=req.id, ok=False, error=exc))
-        except Exception as exc:                       # pragma: no cover
+        except Exception as exc:
+            # Every unexpected handler exception leaves as a well-formed
+            # typed envelope — a crash mid-handler must never kill the
+            # connection or leak a raw traceback onto the wire
+            # (tests/test_rpc.py pins this envelope).
             log.exception("request %s failed", req.id)
             self._count_error()
             respond(Response(id=req.id, ok=False,
@@ -204,6 +230,47 @@ class LatencyRPCServer:
                       "protocol_version": PROTOCOL_VERSION}
         return {"server": server, "batcher": self.batcher.stats(),
                 "service": self.service.stats()}
+
+    def _health(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Degradation state for load balancers / chaos suites: the
+        batcher's shed tier, queue depth, and the hub's bank epochs."""
+        tier = self.batcher.shed_tier()
+        status = {"accept": "ok", "cache_only": "degraded",
+                  "reject": "overloaded"}.get(tier, "degraded")
+        hub = getattr(self.service, "hub", None)
+        return {
+            "status": status,
+            "shed_tier": tier,
+            "queued": self.batcher.queued(),
+            "queue_capacity": self.batcher.policy.max_queue,
+            "hub_epoch": getattr(hub, "epoch", 0),
+            "bank_epochs": hub.epochs() if hasattr(hub, "epochs") else {},
+            "protocol_version": PROTOCOL_VERSION,
+        }
+
+    def _rollover(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Zero-downtime bank swap: install a wire-shipped bank under
+        (setting, family) and return its new epoch.  In-flight flushes
+        finish against the bank they snapshot; new admissions see the
+        new one."""
+        if "setting" not in params or "bank" not in params:
+            raise RPCError(E_BAD_REQUEST,
+                           "rollover needs params.setting and params.bank")
+        setting = setting_from_wire(params["setting"])
+        family = params.get("family") or self.service.predictor
+        try:
+            bank = PredictorBank.from_json(params["bank"])
+        except Exception as exc:
+            raise RPCError(E_BAD_REQUEST,
+                           f"bad bank payload: {exc}") from None
+        hub = getattr(self.service, "hub", None)
+        if hub is None or not hasattr(hub, "swap_bank"):
+            raise RPCError(E_UNAVAILABLE,
+                           "service exposes no hub to roll over",
+                           retryable=False)
+        epoch = hub.swap_bank(setting, family, bank)
+        return {"setting": setting_key(setting), "family": family,
+                "epoch": int(epoch)}
 
     def _search_front(self, params: Dict[str, Any]) -> Dict[str, Any]:
         if self._front is None:
@@ -284,7 +351,8 @@ class LatencyRPCServer:
         return encode_response(slot[0])
 
     def serve_stream(self, rfile: Any, wfile: Any,
-                     drain_timeout: float = 10.0) -> None:
+                     drain_timeout: float = 10.0,
+                     conn: Optional[socket.socket] = None) -> None:
         """Serve a line-oriented stream pair until EOF (stdio mode, and
         the per-connection loop of the TCP listener).
 
@@ -327,6 +395,22 @@ class LatencyRPCServer:
                 idle.notify_all()
             if dead.is_set():
                 return
+            if self.chaos is not None:
+                fault = self.chaos.decide("transport")
+                if fault is not None:
+                    if fault.kind == "drop":
+                        # Injected connection loss: stop writing and
+                        # sever the peer so its reader sees EOF — the
+                        # client must reconnect and re-send.
+                        dead.set()
+                        if conn is not None:
+                            try:
+                                conn.shutdown(socket.SHUT_RDWR)
+                            except OSError:
+                                pass
+                        return
+                    if fault.kind == "delay":
+                        time.sleep(fault.delay_s)
             try:
                 out_q.put_nowait(line)
             except queue.Full:          # stalled peer: drop, don't block
@@ -372,6 +456,15 @@ class LatencyRPCServer:
                 conn, _addr = self._sock.accept()
             except OSError:
                 return                                 # listener closed
+            if self._stopped:
+                # Raced with stop(): the blocked accept() syscall keeps
+                # the kernel socket alive past close(), so one last
+                # connection can slip through — refuse it.
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                return
             with self._lock:
                 self.connections += 1
                 self._conns.append(conn)
@@ -382,7 +475,7 @@ class LatencyRPCServer:
         try:
             rfile = conn.makefile("rb")
             wfile = conn.makefile("wb")
-            self.serve_stream(rfile, wfile)
+            self.serve_stream(rfile, wfile, conn=conn)
         except (OSError, ValueError):
             pass
         finally:
@@ -399,9 +492,18 @@ class LatencyRPCServer:
         self._stopped = True
         if self._sock is not None:
             try:
+                # shutdown() (not just close()) wakes a thread blocked
+                # in accept(): close() alone leaves the kernel socket
+                # listening while the syscall holds its last reference.
+                self._sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
                 self._sock.close()
             except OSError:
                 pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
         with self._lock:
             conns = list(self._conns)
         for c in conns:

@@ -68,14 +68,39 @@ class ServeEngine:
         self.step_report = None
         self.predicted_step_s: Optional[float] = None
         self.prediction_source: Optional[str] = None
+        self._latency_service = latency_service
+        self._step_graph = step_graph
+        self._latency_setting = latency_setting
         if latency_service is not None and step_graph is not None:
-            self.step_report = self._as_report(
-                latency_service.predict_e2e(step_graph, latency_setting))
-            self.predicted_step_s = self.step_report.e2e_s
-            self.prediction_source = type(latency_service).__name__
-            log.info("predicted decode-step latency: %.3f ms (%d kernels, "
-                     "via %s)", 1e3 * self.predicted_step_s,
-                     self.step_report.num_kernels, self.prediction_source)
+            self.refresh_step_estimate()
+
+    def refresh_step_estimate(self) -> Optional[float]:
+        """(Re)fetch the decode-step latency prediction.
+
+        Degrades instead of dying: if the prediction endpoint fails with
+        a typed `RPCError` (remote overloaded / unreachable), the engine
+        keeps serving without an estimate — admission control loses its
+        a-priori number, decode does not stop.  Called at construction
+        and callable again after a bank rollover to re-attribute the
+        estimate to the new epoch."""
+        if self._latency_service is None or self._step_graph is None:
+            return None
+        from repro.rpc.protocol import RPCError
+        try:
+            report = self._latency_service.predict_e2e(
+                self._step_graph, self._latency_setting)
+        except RPCError as exc:
+            log.warning("decode-step latency prediction unavailable "
+                        "(%s: %s) — serving without an estimate",
+                        exc.code, exc.message)
+            return self.predicted_step_s
+        self.step_report = self._as_report(report)
+        self.predicted_step_s = self.step_report.e2e_s
+        self.prediction_source = type(self._latency_service).__name__
+        log.info("predicted decode-step latency: %.3f ms (%d kernels, "
+                 "via %s)", 1e3 * self.predicted_step_s,
+                 self.step_report.num_kernels, self.prediction_source)
+        return self.predicted_step_s
 
     @staticmethod
     def _as_report(report):
@@ -103,6 +128,7 @@ class ServeEngine:
             "predicted_step_s": self.predicted_step_s,
             "measured_over_predicted": ratio,
             "prediction_source": self.prediction_source,
+            "step_bank_epoch": getattr(self.step_report, "bank_epoch", None),
         }
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:

@@ -1,0 +1,682 @@
+"""Fault-tolerance suite: chaos injection, retry/backoff, shedding tiers,
+and zero-downtime bank rollover.
+
+Everything here is deterministic-by-construction: fault schedules are
+pure functions of a `FaultPlan` seed (replayable bit-identically),
+retry backoff traces are asserted against the policy's closed-form
+schedule with injected sleep/clock (no wall-clock sleeps), and the
+shedding-tier state machine runs under a `ManualClock`.  The only
+wall-clock pieces are the socket end-to-end scenarios (reconnect,
+transport drops, rollover under flood), which assert *outcomes* —
+every request answered exactly once, correct epoch attribution — not
+timings.
+
+``RPC_CHAOS_ITERS`` scales the iteration counts (CI smoke profile sets
+it low; the default is a fuller local run).
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import synthetic_graphs
+from repro.core.nas_space import NASSpaceConfig, sample_architecture
+from repro.core.profiler import DeviceSetting
+from repro.pipeline import LatencyService, PredictorHub, ProfileStore
+from repro.rpc import protocol
+from repro.rpc.batcher import BatchPolicy, ManualClock, MicroBatcher
+from repro.rpc.chaos import FaultPlan, FaultSpec
+from repro.rpc.client import LatencyClient
+from repro.rpc.protocol import RPCError
+from repro.rpc.resilience import CircuitBreaker, RetryPolicy, retry_call
+from repro.rpc.server import LatencyRPCServer
+from repro.transfer import CostModelProfileSession
+
+ITERS = int(os.environ.get("RPC_CHAOS_ITERS", "20"))
+SOURCE = DeviceSetting("cpu_f32", "float32", "op_by_op")
+SPACE = NASSpaceConfig(resolution=16)
+
+
+def graphs_for(seeds):
+    return [sample_architecture(s, SPACE) for s in seeds]
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Cost-model-profiled store + trained hub + service (same recipe
+    as tests/test_rpc.py, independent instance so chaos cannot leak)."""
+    store = ProfileStore()
+    session = CostModelProfileSession(store=store, seed=3)
+    for g in synthetic_graphs(8, resolution=16):
+        session.profile_graph(g, SOURCE)
+    hub = PredictorHub()
+    hub.train(store, SOURCE, "gbdt", hparams={"n_stages": 20}, min_samples=3)
+    svc = LatencyService(hub, default_setting=SOURCE, predictor="gbdt")
+    return {"store": store, "hub": hub, "service": svc}
+
+
+def make_bank(store, *, seed=0, n_stages=10):
+    """An independently trained gbdt bank (distinct hparams → distinct
+    predictions) to roll over onto a serving hub."""
+    h = PredictorHub()
+    return h.train(store, SOURCE, "gbdt", hparams={"n_stages": n_stages},
+                   min_samples=3, seed=seed, save=False)
+
+
+def ref_service(bank):
+    """A fresh service whose ONLY bank is ``bank`` — the per-epoch
+    reference oracle for rollover attribution checks."""
+    h = PredictorHub()
+    h.register(SOURCE, "gbdt", bank)
+    return LatencyService(h, default_setting=SOURCE, predictor="gbdt")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: pure, seeded, replayable
+# ---------------------------------------------------------------------------
+
+class TestFaultPlanDeterminism:
+    SPECS = (FaultSpec(site="flush", kind="error", rate=0.25),
+             FaultSpec(site="flush", kind="wedge", rate=0.15),
+             FaultSpec(site="dispatch", kind="delay", rate=0.3,
+                       delay_s=0.001),
+             FaultSpec(site="transport", kind="drop", rate=0.2))
+
+    def test_schedule_matches_consumed_decisions(self):
+        n = max(ITERS, 50)
+        for site in ("flush", "dispatch", "transport"):
+            plan = FaultPlan(11, self.SPECS)
+            preview = plan.schedule(site, n)
+            consumed = [(f.kind if f else None)
+                        for f in (plan.decide(site) for _ in range(n))]
+            assert preview == consumed
+            assert plan.events(site) == n
+
+    def test_same_seed_bit_identical_different_seed_not(self):
+        n = max(ITERS, 200)
+        a = FaultPlan(42, self.SPECS).schedule("flush", n)
+        b = FaultPlan(42, self.SPECS).schedule("flush", n)
+        c = FaultPlan(43, self.SPECS).schedule("flush", n)
+        assert a == b                       # bit-identical replay
+        assert a != c                       # the seed actually matters
+        assert any(k is not None for k in a)
+        assert any(k is None for k in a)
+
+    def test_injected_tally_matches_schedule(self):
+        n = max(ITERS, 100)
+        plan = FaultPlan(7, self.SPECS)
+        sched = plan.schedule("flush", n)
+        for _ in range(n):
+            plan.decide("flush")
+        inj = plan.injected()
+        assert inj.get("flush/error", 0) == sched.count("error")
+        assert inj.get("flush/wedge", 0) == sched.count("wedge")
+        assert plan.stats()["events"]["flush"] == n
+
+    def test_rates_zero_and_one(self):
+        never = FaultPlan(1, [FaultSpec(site="flush", kind="error",
+                                        rate=0.0)])
+        always = FaultPlan(1, [FaultSpec(site="flush", kind="wedge",
+                                         rate=1.0)])
+        assert never.schedule("flush", 50) == [None] * 50
+        assert always.schedule("flush", 50) == ["wedge"] * 50
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            FaultSpec(site="flush", kind="meteor", rate=0.5)
+        with pytest.raises(ValueError):
+            FaultSpec(site="flush", kind="error", rate=1.5)
+        with pytest.raises(ValueError):
+            FaultSpec(site="flush", kind="delay", rate=0.1, delay_s=-1)
+
+    def test_threaded_decide_consumes_each_index_once(self):
+        plan = FaultPlan(5, self.SPECS)
+        n, threads = 200, 8
+        out = []
+        lock = threading.Lock()
+
+        def worker():
+            for _ in range(n // threads):
+                f = plan.decide("flush")
+                with lock:
+                    out.append(f.kind if f else None)
+
+        ts = [threading.Thread(target=worker) for _ in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        # Interleaving may permute arrival order, but the multiset of
+        # decisions is exactly the schedule's first n entries.
+        assert sorted(out, key=str) == \
+            sorted(plan.schedule("flush", n), key=str)
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy / retry_call: deterministic backoff, budgets, breaker
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.t += s
+
+
+class TestRetryPolicy:
+    def test_schedule_deterministic_and_capped(self):
+        pol = RetryPolicy(max_attempts=8, base_delay_s=0.1, multiplier=2.0,
+                          max_delay_s=0.5, jitter=0.25, seed=9)
+        s1, s2 = pol.backoff_schedule(), pol.backoff_schedule()
+        assert s1 == s2 and len(s1) == 7
+        for k, d in enumerate(s1):
+            base = min(0.1 * 2.0 ** k, 0.5)
+            assert base * 0.75 <= d <= base * 1.25   # jitter bounds
+        assert pol.backoff_schedule(seed=10) != s1   # seed matters
+
+    def test_retry_only_retryable_and_exact_backoff_trace(self):
+        pol = RetryPolicy(max_attempts=5, base_delay_s=0.05, seed=3,
+                          deadline_s=100.0)
+        clock = FakeClock()
+        fails = [3]                # first 3 attempts fail retryably
+        slept = []
+
+        def attempt(budget):
+            assert budget > 0
+            if fails[0] > 0:
+                fails[0] -= 1
+                raise RPCError(protocol.E_OVERLOADED, "shed")
+            return "done"
+
+        out = retry_call(attempt, pol, sleep=slept.append, clock=clock)
+        assert out == "done"
+        assert slept == pol.backoff_schedule()[:3]   # exact, closed form
+
+        def fatal(budget):
+            raise RPCError(protocol.E_BAD_REQUEST, "no", retryable=False)
+
+        slept.clear()
+        with pytest.raises(RPCError) as ei:
+            retry_call(fatal, pol, sleep=slept.append, clock=clock)
+        assert ei.value.code == protocol.E_BAD_REQUEST
+        assert slept == []                           # no retry attempted
+
+    def test_deadline_budget_exhausts_with_typed_timeout(self):
+        pol = RetryPolicy(max_attempts=100, base_delay_s=1.0, multiplier=1.0,
+                          jitter=0.0, deadline_s=3.5, seed=0)
+        clock = FakeClock()
+
+        def always(budget):
+            raise RPCError(protocol.E_UNAVAILABLE, "down")
+
+        with pytest.raises(RPCError) as ei:
+            retry_call(always, pol, sleep=clock.sleep, clock=clock)
+        assert ei.value.code == protocol.E_TIMEOUT
+        assert "deadline exhausted" in ei.value.message
+        assert clock.t <= 3.5 + 1e-9     # sleeps never overshoot the budget
+
+    def test_max_attempts_surfaces_last_error(self):
+        pol = RetryPolicy(max_attempts=3, base_delay_s=0.0, jitter=0.0,
+                          deadline_s=100.0)
+        clock = FakeClock()
+        calls = [0]
+
+        def always(budget):
+            calls[0] += 1
+            raise RPCError(protocol.E_OVERLOADED, f"attempt {calls[0]}")
+
+        with pytest.raises(RPCError) as ei:
+            retry_call(always, pol, sleep=clock.sleep, clock=clock)
+        assert calls[0] == 3
+        assert ei.value.message == "attempt 3"
+
+    def test_circuit_breaker_opens_halfopens_closes(self):
+        clock = FakeClock()
+        br = CircuitBreaker(failure_threshold=3, reset_after_s=2.0,
+                            clock=clock)
+        assert br.state() == br.CLOSED and br.allow()
+        for _ in range(3):
+            br.record_failure()
+        assert br.state() == br.OPEN and not br.allow()
+        clock.t += 2.0
+        assert br.state() == br.HALF_OPEN
+        assert br.allow()                  # the single probe
+        assert not br.allow()              # second caller blocked
+        br.record_success()
+        assert br.state() == br.CLOSED and br.allow()
+        # Failed probe re-opens immediately.
+        for _ in range(3):
+            br.record_failure()
+        clock.t += 2.0
+        assert br.allow()
+        br.record_failure()
+        assert br.state() == br.OPEN and br.opens == 2
+
+    def test_retry_call_respects_open_breaker(self):
+        clock = FakeClock()
+        br = CircuitBreaker(failure_threshold=1, reset_after_s=10.0,
+                            clock=clock)
+        br.record_failure()
+        pol = RetryPolicy(deadline_s=100.0)
+        with pytest.raises(RPCError) as ei:
+            retry_call(lambda b: "x", pol, sleep=clock.sleep, clock=clock,
+                       breaker=br)
+        assert ei.value.code == protocol.E_UNAVAILABLE
+        assert "circuit breaker open" in ei.value.message
+
+
+# ---------------------------------------------------------------------------
+# Shedding tiers (ManualClock state machine)
+# ---------------------------------------------------------------------------
+
+class ShedStub:
+    """Minimal service for tier tests: everything fresh unless cached."""
+
+    def __init__(self):
+        self.default_setting = SOURCE
+        self.predictor = "gbdt"
+        self.cached = set()
+
+    def cache_peek(self, graph, setting, family):
+        return ("cached", graph) if graph in self.cached else None
+
+    def predict_batch(self, graphs, setting, family):
+        return [("fresh", g) for g in graphs]
+
+
+class TestSheddingTiers:
+    def mk(self, **kw):
+        svc = ShedStub()
+        clock = ManualClock()
+        policy = BatchPolicy(**{"max_batch": 32, "max_wait_ticks": 1,
+                                "max_queue": 10, "shed_frac": 0.5,
+                                "shed_reject_ticks": 2, **kw})
+        return svc, clock, MicroBatcher(svc, policy, clock=clock,
+                                        auto_start=False)
+
+    def test_accept_to_cache_only_watermark(self):
+        svc, clock, b = self.mk()
+        futs = [b.submit(f"g{i}") for i in range(5)]   # fill to 5 = 0.5*10
+        assert b.shed_tier() == "cache_only"
+        with pytest.raises(RPCError) as ei:
+            b.submit("fresh_over")                     # fresh work shed
+        assert ei.value.code == protocol.E_OVERLOADED and ei.value.retryable
+        assert "cache_only" in ei.value.message
+        svc.cached.add("hot")
+        hit = b.submit("hot")                          # cache hits survive
+        assert hit.done() and hit.result(0) == ("cached", "hot")
+        st = b.stats()
+        assert st["shed_cache_only"] == 1 and st["shed_rejected"] == 0
+        clock.advance(1)
+        assert b.run_pending() == 5                    # drain...
+        assert b.shed_tier() == "accept"               # ...recovers the tier
+        assert all(f.result(0)[0] == "fresh" for f in futs)
+
+    def test_reject_tier_when_queue_stuck(self):
+        svc, clock, b = self.mk()
+        for i in range(5):
+            b.submit(f"s{i}")
+        assert b.shed_tier() == "cache_only"
+        # Head deadline = 1; overdue age must EXCEED shed_reject_ticks=2.
+        clock.advance(3)                 # now=3, overdue by 2: not yet
+        assert b.shed_tier() == "cache_only"
+        clock.advance(1)                 # now=4, overdue by 3 > 2: stuck
+        assert b.shed_tier() == "reject"
+        svc.cached.add("hot")
+        with pytest.raises(RPCError) as ei:
+            b.submit("hot")              # reject shuts even the cache path
+        assert ei.value.code == protocol.E_OVERLOADED
+        assert "reject" in ei.value.message
+        assert b.stats()["shed_rejected"] == 1
+        assert b.run_pending() == 5      # flushing unsticks the queue
+        assert b.shed_tier() == "accept"
+        assert b.submit("after").done() is False       # admitted again
+
+    def test_below_watermark_accepts(self):
+        svc, clock, b = self.mk()
+        for i in range(4):               # 4 < 5 = watermark
+            b.submit(f"a{i}")
+        assert b.shed_tier() == "accept"
+        b.submit("fifth_ok")             # the submit that CROSSES is fine
+        assert b.queued() == 5
+
+    def test_legacy_defaults_single_cliff(self):
+        """shed_frac=1.0 + no reject ticks == the original behavior:
+        fresh rejected only at a full queue, cache served always."""
+        svc, clock, b = self.mk(shed_frac=1.0, shed_reject_ticks=None,
+                                max_queue=3)
+        for i in range(3):
+            b.submit(f"x{i}")
+        assert b.shed_tier() == "cache_only"
+        with pytest.raises(RPCError):
+            b.submit("over")
+        clock.advance(100)               # stuck forever, still never reject
+        assert b.shed_tier() == "cache_only"
+        svc.cached.add("hot")
+        assert b.submit("hot").done()
+
+
+# ---------------------------------------------------------------------------
+# Chaos in the batcher: exactly-once under error/wedge/delay storms
+# ---------------------------------------------------------------------------
+
+class TestBatcherChaosExactlyOnce:
+    def test_seeded_storm_every_request_settles_once(self):
+        plan = FaultPlan(13, [
+            FaultSpec(site="flush", kind="error", rate=0.2,
+                      code=protocol.E_UNAVAILABLE, message="injected"),
+            FaultSpec(site="flush", kind="wedge", rate=0.2),
+        ])
+        svc = ShedStub()
+        clock = ManualClock()
+        b = MicroBatcher(svc, BatchPolicy(max_batch=4, max_wait_ticks=1,
+                                          max_queue=4096),
+                         clock=clock, auto_start=False, chaos=plan)
+        n = max(4 * ITERS, 40)
+        futs = [b.submit(f"g{i}") for i in range(n)]
+        for _ in range(20 * n):          # bounded pumping, no sleeps
+            clock.advance(1)
+            b.run_pending()
+            if all(f.done() for f in futs):
+                break
+        assert all(f.done() for f in futs), "requests lost under chaos"
+        ok = err = 0
+        for i, f in enumerate(futs):
+            e = f.error()
+            if e is None:
+                assert f.result(0) == ("fresh", f"g{i}")   # not cross-wired
+                ok += 1
+            else:
+                assert e.code == protocol.E_UNAVAILABLE
+                assert e.message == "injected"
+                err += 1
+        assert ok + err == n
+        st = b.stats()
+        assert st["answered"] == ok and st["failed"] == err
+        inj = plan.injected()
+        assert st["wedged_flushes"] == inj.get("flush/wedge", 0)
+        if inj.get("flush/error"):
+            assert err > 0
+        b.close()
+
+    def test_replay_same_seed_same_outcome_split(self):
+        def run(seed):
+            plan = FaultPlan(seed, [FaultSpec(site="flush", kind="error",
+                                              rate=0.3)])
+            svc = ShedStub()
+            clock = ManualClock()
+            b = MicroBatcher(svc, BatchPolicy(max_batch=2, max_wait_ticks=0,
+                                              max_queue=4096),
+                             clock=clock, auto_start=False, chaos=plan)
+            futs = [b.submit(f"r{i}") for i in range(30)]
+            b.flush_all()
+            return [f.error().code if f.error() else "ok" for f in futs]
+
+        assert run(21) == run(21)
+        assert run(21) != run(22)
+
+    def test_wedge_storm_drains_or_fails_typed_on_close(self):
+        """A rate-1.0 wedge plan can never flush; close() must not hang
+        and must fail the stranded requests with a typed envelope."""
+        plan = FaultPlan(1, [FaultSpec(site="flush", kind="wedge", rate=1.0)])
+        svc = ShedStub()
+        clock = ManualClock()
+        b = MicroBatcher(svc, BatchPolicy(max_batch=4, max_wait_ticks=0,
+                                          max_queue=64),
+                         clock=clock, auto_start=False, chaos=plan)
+        futs = [b.submit(f"w{i}") for i in range(8)]
+        assert b.run_pending() == 0          # all wedged, no progress
+        assert b.queued() == 8               # requeued, nothing lost
+        b.close()
+        for f in futs:
+            assert f.done()
+            assert f.error().code == protocol.E_UNAVAILABLE
+        assert b.stats()["failed"] == 8
+
+
+# ---------------------------------------------------------------------------
+# Client retry vs dispatch chaos: schedule asserted in closed form
+# ---------------------------------------------------------------------------
+
+class TestClientRetryConvergence:
+    def test_retries_converge_with_exact_backoff_trace(self, served):
+        seed = 97
+        plan = FaultPlan(seed, [FaultSpec(site="dispatch", kind="error",
+                                          rate=0.4,
+                                          code=protocol.E_UNAVAILABLE,
+                                          message="chaos says no")])
+        pol = RetryPolicy(max_attempts=10, base_delay_s=0.01, seed=5,
+                          deadline_s=60.0)
+        n_calls = max(ITERS // 2, 8)
+        # Closed-form expectation: walk the dispatch schedule, one event
+        # per attempt, sequential single-threaded calls.
+        sched = plan.schedule("dispatch", 50 * n_calls)
+        expected_sleeps, i = [], 0
+        for _ in range(n_calls):
+            fails = 0
+            while sched[i] == "error":
+                i += 1
+                fails += 1
+            i += 1                        # the clean attempt
+            assert fails < pol.max_attempts, "pick a friendlier seed"
+            expected_sleeps += pol.backoff_schedule()[:fails]
+        server = LatencyRPCServer(served["service"], chaos=plan)
+        host, port = server.start()
+        slept = []
+        cli = LatencyClient(host, port, timeout=30.0, retry=pol,
+                            sleep=slept.append)
+        try:
+            for _ in range(n_calls):
+                banks = cli.call("available", {})
+                assert ["float32/op_by_op", "gbdt"] in banks["banks"]
+        finally:
+            cli.close()
+            server.stop()
+        assert slept == expected_sleeps   # the exact seeded backoff trace
+        assert cli.retries == len(expected_sleeps)
+        assert plan.events("dispatch") == i
+
+
+# ---------------------------------------------------------------------------
+# Transport drops end-to-end: reconnect + retry reach 100% success
+# ---------------------------------------------------------------------------
+
+class TestTransportChaos:
+    def test_dropped_connections_heal_to_full_success(self, served):
+        plan = FaultPlan(31, [FaultSpec(site="transport", kind="drop",
+                                        rate=0.25)])
+        server = LatencyRPCServer(
+            served["service"], chaos=plan,
+            policy=BatchPolicy(max_batch=8, max_wait_ticks=2,
+                               max_queue=4096))
+        host, port = server.start()
+        served["service"].clear_cache()
+        pol = RetryPolicy(max_attempts=8, base_delay_s=0.01,
+                          max_delay_s=0.05, deadline_s=30.0, seed=2)
+        cli = LatencyClient(host, port, timeout=5.0, retry=pol)
+        gs = graphs_for(range(700, 700 + max(ITERS, 12)))
+        try:
+            reports = [cli.predict_e2e(g) for g in gs]
+        finally:
+            cli.close()
+            server.stop()
+        assert len(reports) == len(gs)                 # 100% success
+        assert [r.fingerprint for r in reports] == \
+            [g.fingerprint() for g in gs]
+        direct = [served["service"].predict_e2e(g) for g in gs]
+        assert [r.e2e_s for r in reports] == [d.e2e_s for d in direct]
+        assert plan.injected().get("transport/drop", 0) > 0
+        assert cli.reconnects > 0          # drops actually forced reconnects
+
+
+# ---------------------------------------------------------------------------
+# Rollover: health + rollover RPC, epoch attribution, flood survival
+# ---------------------------------------------------------------------------
+
+class TestRollover:
+    def test_swap_bank_epochs_and_report_attribution(self, served):
+        hub, svc = served["hub"], served["service"]
+        svc.clear_cache()
+        g = graphs_for([800])[0]
+        e_old = hub.epoch_of(SOURCE, "gbdt")
+        assert e_old >= 1                  # train() stamped it
+        before = svc.predict_e2e(g)
+        assert before.bank_epoch == e_old
+        bank2 = make_bank(served["store"], seed=1, n_stages=5)
+        e_new = hub.swap_bank(SOURCE, "gbdt", bank2)
+        assert e_new > e_old
+        assert hub.epoch_of(SOURCE, "gbdt") == e_new
+        after = svc.predict_e2e(g)
+        assert after.bank_epoch == e_new
+        assert after.e2e_s == ref_service(bank2).predict_e2e(g).e2e_s
+        # Reports round-trip the epoch over the wire format.
+        from repro.pipeline.service import PredictionReport
+        clone = PredictionReport.from_json(after.to_json())
+        assert clone.bank_epoch == e_new
+
+    def test_health_and_rollover_rpc_end_to_end(self, served):
+        server = LatencyRPCServer(served["service"])
+        host, port = server.start()
+        served["service"].clear_cache()
+        cli = LatencyClient(host, port, timeout=30.0)
+        try:
+            h = cli.health()
+            assert h["status"] == "ok" and h["shed_tier"] == "accept"
+            e_before = h["bank_epochs"]["float32/op_by_op"]["gbdt"]
+            bank2 = make_bank(served["store"], seed=2, n_stages=7)
+            out = cli.rollover(SOURCE, bank2, family="gbdt")
+            assert out["setting"] == "float32/op_by_op"
+            assert out["family"] == "gbdt"
+            assert out["epoch"] > e_before
+            h2 = cli.health()
+            assert h2["bank_epochs"]["float32/op_by_op"]["gbdt"] == \
+                out["epoch"]
+            assert h2["hub_epoch"] >= out["epoch"]
+            rep = cli.predict_e2e(graphs_for([801])[0])
+            assert rep.bank_epoch == out["epoch"]
+            assert rep.e2e_s == \
+                ref_service(bank2).predict_e2e(graphs_for([801])[0]).e2e_s
+        finally:
+            cli.close()
+            server.stop()
+
+    def test_rollover_under_threaded_flood_loses_nothing(self, served):
+        """32 client threads flood predicts while the bank swaps
+        mid-flight: every request is answered exactly once, and every
+        report's e2e matches the reference oracle for the bank epoch it
+        claims to have been computed against."""
+        hub, svc = served["hub"], served["service"]
+        svc.clear_cache()
+        bank_old = hub.get(SOURCE, "gbdt")
+        e_old = hub.epoch_of(SOURCE, "gbdt")
+        bank_new = make_bank(served["store"], seed=4, n_stages=12)
+        server = LatencyRPCServer(
+            svc, policy=BatchPolicy(max_batch=16, max_wait_ticks=2,
+                                    max_queue=8192))
+        host, port = server.start()
+        threads_n = 32
+        per_thread = max(ITERS // 4, 4)
+        total = threads_n * per_thread
+        results = []
+        errors = []
+        done_count = [0]
+        lock = threading.Lock()
+        start = threading.Barrier(threads_n + 1)
+
+        def worker(tid):
+            cli = LatencyClient(host, port, timeout=30.0,
+                                retry=RetryPolicy(max_attempts=6,
+                                                  base_delay_s=0.01,
+                                                  seed=tid))
+            try:
+                gs = graphs_for(range(1000 + tid * per_thread,
+                                      1000 + (tid + 1) * per_thread))
+                start.wait()
+                for g in gs:
+                    rep = cli.predict_e2e(g)
+                    with lock:
+                        results.append((g, rep))
+                        done_count[0] += 1
+            except Exception as exc:       # pragma: no cover - fail loudly
+                with lock:
+                    errors.append(exc)
+            finally:
+                cli.close()
+
+        ts = [threading.Thread(target=worker, args=(i,))
+              for i in range(threads_n)]
+        for t in ts:
+            t.start()
+        start.wait()
+        # Swap once the flood is demonstrably in flight but far from
+        # done, so both epochs are observable on the answers.
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            with lock:
+                if done_count[0] >= max(total // 8, 1):
+                    break
+            time.sleep(0.001)
+        e_new = hub.swap_bank(SOURCE, "gbdt", bank_new)   # mid-flood swap
+        for t in ts:
+            t.join(timeout=120)
+        server.stop()
+        assert not errors, errors
+        assert len(results) == total       # zero lost, exactly once each
+        oracle = {e_old: ref_service(bank_old), e_new: ref_service(bank_new)}
+        seen_epochs = set()
+        for g, rep in results:
+            assert rep.fingerprint == g.fingerprint()     # not cross-wired
+            assert rep.bank_epoch in oracle, \
+                f"report claims unknown epoch {rep.bank_epoch}"
+            seen_epochs.add(rep.bank_epoch)
+            want = oracle[rep.bank_epoch].predict_e2e(g).e2e_s
+            assert rep.e2e_s == want       # epoch attribution is truthful
+        assert e_new in seen_epochs        # the swap actually landed
+        assert hub.epoch_of(SOURCE, "gbdt") == e_new
+
+    def test_engine_survives_unavailable_predictor(self, served):
+        """ServeEngine degrades (no estimate) instead of crashing when
+        the prediction endpoint fails, and refreshes after recovery."""
+        from repro.serving import ServeEngine
+
+        class FlakyService:
+            def __init__(self, inner):
+                self.inner = inner
+                self.down = True
+
+            def predict_e2e(self, graph, setting=None):
+                if self.down:
+                    raise RPCError(protocol.E_UNAVAILABLE, "flood")
+                return self.inner.predict_e2e(graph, setting)
+
+        class StubModel:
+            def init_cache(self, slots, max_len):
+                return {"pos": 0}
+
+            def decode_step(self, params, batch, cache):
+                import jax.numpy as jnp
+                logits = jnp.tile(jnp.arange(8.0),
+                                  (batch["token"].shape[0], 1))
+                return logits, {"pos": cache["pos"] + 1}
+
+        flaky = FlakyService(served["service"])
+        step = graphs_for([900])[0]
+        eng = ServeEngine(StubModel(), params={}, batch_slots=2, max_len=16,
+                          latency_service=flaky, step_graph=step,
+                          latency_setting=SOURCE)
+        assert eng.predicted_step_s is None           # degraded, not dead
+        assert eng.stats()["step_bank_epoch"] is None
+        eng.submit(np.array([1, 2, 3]), max_new_tokens=2)
+        assert len(eng.run(max_steps=10)) == 1        # decode still works
+        flaky.down = False
+        assert eng.refresh_step_estimate() is not None
+        assert eng.predicted_step_s == \
+            served["service"].predict_e2e(step, SOURCE).e2e_s
+        assert eng.stats()["step_bank_epoch"] == \
+            served["hub"].epoch_of(SOURCE, "gbdt")

@@ -174,7 +174,7 @@ class TestGolden:
                 codes.add(resp.error.code)
             assert encode_response(resp) == line
         assert {protocol.E_OVERLOADED, protocol.E_UNKNOWN_METHOD,
-                protocol.E_BAD_GRAPH} <= codes
+                protocol.E_BAD_GRAPH, protocol.E_INTERNAL} <= codes
 
     def test_golden_graph_payload_decodes(self):
         with open(os.path.join(GOLDEN, "rpc_requests.jsonl")) as f:
@@ -372,6 +372,42 @@ class TestDispatch:
         resp = decode_response(server.handle_line(self.req("predict", {})))
         assert not resp.ok and resp.error.code == protocol.E_BAD_REQUEST
 
+    def test_internal_error_envelope(self, server, monkeypatch):
+        """An unexpected handler crash leaves as a well-formed typed
+        `internal` envelope — never a dead connection or raw traceback."""
+        def boom(params):
+            raise RuntimeError("predictor bank poisoned")
+        monkeypatch.setattr(server, "_available", boom)
+        resp = decode_response(server.handle_line(self.req("available", {})))
+        assert not resp.ok
+        assert resp.error.code == protocol.E_INTERNAL
+        assert not resp.error.retryable
+        assert "RuntimeError" in resp.error.message
+        assert "predictor bank poisoned" in resp.error.message
+        # The envelope re-encodes canonically (same invariant the golden
+        # rpc_responses.jsonl internal line pins).
+        line = encode_response(resp)
+        assert encode_response(decode_response(line)) == line
+
+    def test_health_endpoint(self, server):
+        resp = decode_response(server.handle_line(self.req("health", {})))
+        assert resp.ok
+        h = resp.result
+        assert h["status"] == "ok" and h["shed_tier"] == "accept"
+        assert h["queued"] == 0
+        assert h["queue_capacity"] == server.batcher.policy.max_queue
+        assert h["hub_epoch"] >= 2            # the fixture trained 2 banks
+        assert h["bank_epochs"]["float32/op_by_op"]["gbdt"] >= 1
+        assert h["protocol_version"] == PROTOCOL_VERSION
+
+    def test_rollover_bad_payloads_typed(self, server):
+        resp = decode_response(server.handle_line(self.req("rollover", {})))
+        assert not resp.ok and resp.error.code == protocol.E_BAD_REQUEST
+        resp = decode_response(server.handle_line(self.req(
+            "rollover", {"setting": "float32/op_by_op",
+                         "bank": {"not": "a bank"}})))
+        assert not resp.ok and resp.error.code == protocol.E_BAD_REQUEST
+
     def test_available_and_stats(self, served, server):
         resp = decode_response(server.handle_line(self.req("available", {})))
         assert ["float32/op_by_op", "gbdt"] in resp.result["banks"]
@@ -472,6 +508,46 @@ class TestSocket:
         assert ei.value.code == protocol.E_UNAVAILABLE
         assert __import__("time").monotonic() - t0 < 1.0   # no 30 s hang
         cli.close()
+
+    def test_connection_loss_is_retryable_not_fatal(self, served):
+        """Regression: a read-loop failure used to brick the client for
+        good (every later send failed on the closed flag).  Now a lost
+        connection fails in-flight work with a *retryable* envelope and
+        later sends attempt a reconnect — the client object survives."""
+        server = LatencyRPCServer(served["service"])
+        host, port = server.start()
+        cli = LatencyClient(host, port, timeout=30.0)
+        assert cli.available()
+        server.stop()
+        # Every post-drop call fails retryable-unavailable (reconnects
+        # refused — nothing listens) — never the terminal closed error.
+        for _ in range(3):
+            with pytest.raises(RPCError) as ei:
+                cli.call("available", {}, timeout=0.5)
+            assert ei.value.code == protocol.E_UNAVAILABLE
+            assert ei.value.retryable, "lost connection must be retryable"
+        # A server coming back on the SAME port heals the client.
+        server2 = LatencyRPCServer(served["service"], host=host, port=port)
+        server2.start()
+        try:
+            deadline = __import__("time").monotonic() + 5
+            banks = None
+            while __import__("time").monotonic() < deadline:
+                try:
+                    banks = cli.available()
+                    break
+                except RPCError:
+                    __import__("time").sleep(0.05)
+            assert banks, "client never recovered after server restart"
+            assert cli.reconnects >= 1
+        finally:
+            cli.close()
+            server2.stop()
+        # After an explicit close the error is terminal, not retryable.
+        with pytest.raises(RPCError) as ei:
+            cli.call("available", {})
+        assert ei.value.code == protocol.E_UNAVAILABLE
+        assert not ei.value.retryable
 
     def test_overload_rejected_then_drains(self, served):
         server = LatencyRPCServer(

@@ -1,18 +1,24 @@
-"""Hypothesis property tests for the micro-batcher's flush policy.
+"""Property + state-machine tests for the micro-batcher's flush policy.
 
-For *arbitrary* arrival orders, batch-size/wait policies, and tick
-sequences — driven synchronously under a `ManualClock` with no worker
-thread, so the schedule is pure state-machine — the batcher must:
+The hypothesis-driven half explores *arbitrary* arrival orders,
+batch-size/wait policies, and tick sequences — driven synchronously
+under a `ManualClock` with no worker thread, so the schedule is pure
+state-machine — and checks the batcher:
 
-  * answer every request exactly once (none lost, double-resolution
+  * answers every request exactly once (none lost, double-resolution
     raises);
-  * never cross-wire: each answer is the per-request value the backing
+  * never cross-wires: each answer is the per-request value the backing
     service computes for exactly that request's graph, bit-identical
     to calling it directly;
-  * respect the policy: no flushed batch exceeds ``max_batch``; within
+  * respects the policy: no flushed batch exceeds ``max_batch``; within
     a (setting, family) group, requests are served FIFO;
-  * be deterministic: replaying the same event script yields the exact
+  * is deterministic: replaying the same event script yields the exact
     same flush sequence (same batches, same composition, same order).
+
+hypothesis is an optional dev dependency (requirements-dev.txt): when
+absent, the property half is skipped but the deterministic edge-case
+half below — `PendingResult` timeout semantics, `ManualClock` deadline
+boundaries — still runs everywhere.
 
 The backing service is a stub (the batcher only needs
 ``cache_peek``/``predict_batch``/``default_setting``/``predictor``), so
@@ -20,13 +26,20 @@ thousands of drawn cases run in milliseconds; bit-identity against the
 *real* `LatencyService` is covered deterministically in
 tests/test_rpc.py and tests/test_concurrency.py.
 """
+import time
+
 import pytest
 
-pytest.importorskip("hypothesis")  # optional dep — see requirements-dev.txt
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                       # optional dep — property half skips
+    HAS_HYPOTHESIS = False
 
 from repro.core.profiler import DeviceSetting
-from repro.rpc.batcher import BatchPolicy, ManualClock, MicroBatcher
+from repro.rpc.batcher import (BatchPolicy, ManualClock, MicroBatcher,
+                               PendingResult)
+from repro.rpc.protocol import E_TIMEOUT, RPCError
 
 SETTINGS = (DeviceSetting("dev_a", "float32", "op_by_op"),
             DeviceSetting("dev_b", "int8", "op_by_op"))
@@ -67,22 +80,6 @@ class StubService:
                 for g in graphs]
 
 
-# Event scripts: submit (which setting, which token) / advance / pump.
-EVENTS = st.lists(
-    st.one_of(
-        st.tuples(st.just("submit"), st.integers(0, 1), st.integers(0, 30)),
-        st.tuples(st.just("advance"), st.integers(1, 4), st.just(0)),
-        st.tuples(st.just("pump"), st.just(0), st.just(0)),
-    ),
-    min_size=1, max_size=40)
-
-POLICIES = st.builds(
-    BatchPolicy,
-    max_batch=st.integers(1, 6),
-    max_wait_ticks=st.integers(0, 4),
-    max_queue=st.just(10_000))
-
-
 def drive(events, policy, cached_uids=frozenset()):
     """Run one script; returns (service, futures, uid sequence per sub)."""
     svc = StubService(cached_uids)
@@ -105,82 +102,192 @@ def drive(events, policy, cached_uids=frozenset()):
     return svc, futures, b
 
 
-@settings(max_examples=120, deadline=None)
-@given(events=EVENTS, policy=POLICIES)
-def test_every_request_answered_exactly_once(events, policy):
-    svc, futures, b = drive(events, policy)
-    submits = [e for e in events if e[0] == "submit"]
-    assert len(futures) == len(submits)
-    for g, setting, fut in futures:
-        assert fut.done()                      # nothing lost
-        kind, uid, value = fut.result(0)
-        assert uid == g.uid                    # not cross-wired
-        assert value == StubService.value_of(g.uid, setting, "gbdt")
-    st_ = b.stats()
-    assert st_["answered"] == len(futures)
-    assert st_["failed"] == st_["rejected"] == 0
-    assert st_["queued"] == 0
-    # Every non-short-circuited request appears in exactly one call.
-    flushed = [uid for _, _, uids in svc.calls for uid in uids]
-    assert len(flushed) == len(set(flushed)) == \
-        len(futures) - st_["short_circuits"]
+# ---------------------------------------------------------------------------
+# Deterministic edge cases (no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+class TestPendingResultTimeout:
+    def test_unsettled_result_raises_retryable_timeout(self):
+        p = PendingResult()
+        with pytest.raises(RPCError) as ei:
+            p.result(timeout=0.02)
+        assert ei.value.code == E_TIMEOUT
+        assert ei.value.retryable          # callers may safely re-poll
+        assert "0.02" in ei.value.message
+
+    def test_timeout_does_not_settle_the_future(self):
+        """A timed-out wait is an observer giving up, not a resolution:
+        the future stays open and settles exactly once later."""
+        p = PendingResult()
+        with pytest.raises(RPCError):
+            p.result(timeout=0)
+        assert not p.done()
+        p._resolve("late answer")
+        assert p.done()
+        assert p.result(0) == "late answer"
+        with pytest.raises(RuntimeError):   # exactly-once still enforced
+            p._resolve("again")
+
+    def test_zero_timeout_polls_immediately(self):
+        p = PendingResult()
+        t0 = time.monotonic()
+        with pytest.raises(RPCError) as ei:
+            p.result(timeout=0)
+        assert ei.value.code == E_TIMEOUT
+        assert time.monotonic() - t0 < 1.0  # a poll, not a wait
+
+    def test_settled_future_ignores_timeout(self):
+        p = PendingResult()
+        p._resolve("x")
+        assert p.result(timeout=0) == "x"
 
 
-@settings(max_examples=120, deadline=None)
-@given(events=EVENTS, policy=POLICIES)
-def test_batches_bounded_and_fifo_per_group(events, policy):
-    svc, futures, _ = drive(events, policy)
-    per_group_served = {}
-    for dtype, family, uids in svc.calls:
-        assert 1 <= len(uids) <= policy.max_batch
-        per_group_served.setdefault(dtype, []).extend(uids)
-    per_group_submitted = {}
-    for g, setting, _fut in futures:
-        per_group_submitted.setdefault(setting.dtype, []).append(g.uid)
-    assert per_group_served == per_group_submitted    # FIFO, group-local
+class TestManualClockDeadlineEdges:
+    def mk(self, **kw):
+        svc = StubService()
+        clock = ManualClock()
+        policy = BatchPolicy(**{"max_batch": 8, "max_wait_ticks": 2,
+                                "max_queue": 64, **kw})
+        return svc, clock, MicroBatcher(svc, policy, clock=clock,
+                                        auto_start=False)
+
+    def test_zero_max_wait_ticks_due_immediately(self):
+        """max_wait_ticks=0: the deadline IS the submit tick, so the
+        request is due with no advance at all."""
+        svc, clock, b = self.mk(max_wait_ticks=0)
+        fut = b.submit(FakeGraph("t0"))
+        assert b.run_pending() == 1
+        assert fut.done() and fut.result(0)[1] == "t0"
+        assert svc.calls == [("float32", "gbdt", ("t0",))]
+
+    def test_deadline_exactly_at_now_is_due(self):
+        """Boundary semantics are ``deadline <= now``: one tick short of
+        the deadline nothing flushes; landing exactly on it flushes."""
+        svc, clock, b = self.mk(max_wait_ticks=2)
+        fut = b.submit(FakeGraph("edge"))
+        assert b.run_pending() == 0         # t=0: not due
+        clock.advance(1)
+        assert b.run_pending() == 0         # t=1: one tick early, not due
+        clock.advance(1)                    # t=2 == deadline exactly
+        assert b.run_pending() == 1
+        assert fut.done()
+
+    def test_overshoot_past_deadline_still_served_once(self):
+        svc, clock, b = self.mk(max_wait_ticks=1)
+        fut = b.submit(FakeGraph("late"))
+        clock.advance(10)                   # far past the deadline
+        assert b.run_pending() == 1
+        assert fut.result(0)[1] == "late"
+        assert b.run_pending() == 0         # nothing left, nothing doubled
+        assert b.stats()["answered"] == 1
+
+    def test_advance_wakes_subscribers(self):
+        clock = ManualClock()
+        hits = []
+        clock.subscribe(lambda: hits.append(clock.now()))
+        assert clock.advance(3) == 3
+        assert clock.advance(2) == 5
+        assert hits == [3, 5]
 
 
-@settings(max_examples=80, deadline=None)
-@given(events=EVENTS, policy=POLICIES)
-def test_flush_schedule_deterministic_on_replay(events, policy):
-    svc1, _, _ = drive(events, policy)
-    svc2, _, _ = drive(events, policy)
-    assert svc1.calls == svc2.calls
+# ---------------------------------------------------------------------------
+# Hypothesis property half (skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
 
+if HAS_HYPOTHESIS:
+    # Event scripts: submit (which setting, which token) / advance / pump.
+    EVENTS = st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.integers(0, 1),
+                      st.integers(0, 30)),
+            st.tuples(st.just("advance"), st.integers(1, 4), st.just(0)),
+            st.tuples(st.just("pump"), st.just(0), st.just(0)),
+        ),
+        min_size=1, max_size=40)
 
-@settings(max_examples=80, deadline=None)
-@given(events=EVENTS, policy=POLICIES,
-       cached=st.sets(st.integers(0, 30), max_size=10))
-def test_cache_short_circuits_never_enqueue(events, policy, cached):
-    # Mark some *tokens* cached: any submission whose token id is in the
-    # set answers immediately from cache_peek and must not reach
-    # predict_batch.
-    svc = StubService()
-    clock = ManualClock()
-    b = MicroBatcher(svc, policy, clock=clock, auto_start=False)
-    futures = []
-    for i, (kind, a, c) in enumerate(events):
-        if kind == "submit":
-            g = FakeGraph((a, c, i))
-            if c in cached:
-                svc.cached_uids.add(g.uid)
-            futures.append((g, SETTINGS[a], c in cached,
-                            b.submit(g, SETTINGS[a])))
-            b.run_pending()
-        elif kind == "advance":
-            clock.advance(a)
-            b.run_pending()
-        else:
-            b.run_pending()
-    b.flush_all()
-    flushed = {uid for _, _, uids in svc.calls for uid in uids}
-    n_cached = 0
-    for g, setting, was_cached, fut in futures:
-        kind, uid, value = fut.result(0)
-        assert uid == g.uid
-        if was_cached:
-            n_cached += 1
-            assert kind == "cached" and g.uid not in flushed
-        else:
-            assert kind == "fresh"
-    assert b.stats()["short_circuits"] == n_cached
+    POLICIES = st.builds(
+        BatchPolicy,
+        max_batch=st.integers(1, 6),
+        max_wait_ticks=st.integers(0, 4),
+        max_queue=st.just(10_000))
+
+    @settings(max_examples=120, deadline=None)
+    @given(events=EVENTS, policy=POLICIES)
+    def test_every_request_answered_exactly_once(events, policy):
+        svc, futures, b = drive(events, policy)
+        submits = [e for e in events if e[0] == "submit"]
+        assert len(futures) == len(submits)
+        for g, setting, fut in futures:
+            assert fut.done()                      # nothing lost
+            kind, uid, value = fut.result(0)
+            assert uid == g.uid                    # not cross-wired
+            assert value == StubService.value_of(g.uid, setting, "gbdt")
+        st_ = b.stats()
+        assert st_["answered"] == len(futures)
+        assert st_["failed"] == st_["rejected"] == 0
+        assert st_["queued"] == 0
+        # Every non-short-circuited request appears in exactly one call.
+        flushed = [uid for _, _, uids in svc.calls for uid in uids]
+        assert len(flushed) == len(set(flushed)) == \
+            len(futures) - st_["short_circuits"]
+
+    @settings(max_examples=120, deadline=None)
+    @given(events=EVENTS, policy=POLICIES)
+    def test_batches_bounded_and_fifo_per_group(events, policy):
+        svc, futures, _ = drive(events, policy)
+        per_group_served = {}
+        for dtype, family, uids in svc.calls:
+            assert 1 <= len(uids) <= policy.max_batch
+            per_group_served.setdefault(dtype, []).extend(uids)
+        per_group_submitted = {}
+        for g, setting, _fut in futures:
+            per_group_submitted.setdefault(setting.dtype, []).append(g.uid)
+        assert per_group_served == per_group_submitted   # FIFO, group-local
+
+    @settings(max_examples=80, deadline=None)
+    @given(events=EVENTS, policy=POLICIES)
+    def test_flush_schedule_deterministic_on_replay(events, policy):
+        svc1, _, _ = drive(events, policy)
+        svc2, _, _ = drive(events, policy)
+        assert svc1.calls == svc2.calls
+
+    @settings(max_examples=80, deadline=None)
+    @given(events=EVENTS, policy=POLICIES,
+           cached=st.sets(st.integers(0, 30), max_size=10))
+    def test_cache_short_circuits_never_enqueue(events, policy, cached):
+        # Mark some *tokens* cached: any submission whose token id is in
+        # the set answers immediately from cache_peek and must not reach
+        # predict_batch.
+        svc = StubService()
+        clock = ManualClock()
+        b = MicroBatcher(svc, policy, clock=clock, auto_start=False)
+        futures = []
+        for i, (kind, a, c) in enumerate(events):
+            if kind == "submit":
+                g = FakeGraph((a, c, i))
+                if c in cached:
+                    svc.cached_uids.add(g.uid)
+                futures.append((g, SETTINGS[a], c in cached,
+                                b.submit(g, SETTINGS[a])))
+                b.run_pending()
+            elif kind == "advance":
+                clock.advance(a)
+                b.run_pending()
+            else:
+                b.run_pending()
+        b.flush_all()
+        flushed = {uid for _, _, uids in svc.calls for uid in uids}
+        n_cached = 0
+        for g, setting, was_cached, fut in futures:
+            kind, uid, value = fut.result(0)
+            assert uid == g.uid
+            if was_cached:
+                n_cached += 1
+                assert kind == "cached" and g.uid not in flushed
+            else:
+                assert kind == "fresh"
+        assert b.stats()["short_circuits"] == n_cached
+else:
+    def test_hypothesis_property_half_skipped():
+        pytest.skip("hypothesis not installed — property half skipped "
+                    "(deterministic edge cases above still ran)")
