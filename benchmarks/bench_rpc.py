@@ -39,6 +39,7 @@ import numpy as np
 from repro.core.dataset import synthetic_graphs
 from repro.core.nas_space import NASSpaceConfig, sample_architecture
 from repro.core.profiler import DeviceSetting
+from repro.obs import Observability
 from repro.pipeline import LatencyService, PredictorHub, ProfileStore
 from repro.rpc.batcher import BatchPolicy, MicroBatcher, MonotonicClock
 from repro.rpc.chaos import FaultPlan, FaultSpec
@@ -53,7 +54,8 @@ WINDOW = 4          # in-flight requests per client thread (pipelining)
 MAX_BATCH = 64      # the batched phase's coalescing cap
 
 
-def build_service(n_train: int, n_stages: int, backend: str) -> LatencyService:
+def build_service(n_train: int, n_stages: int, backend: str,
+                  obs: Observability = None) -> LatencyService:
     store = ProfileStore()
     session = CostModelProfileSession(store=store, seed=3)
     for g in synthetic_graphs(n_train, resolution=16):
@@ -62,16 +64,17 @@ def build_service(n_train: int, n_stages: int, backend: str) -> LatencyService:
     hub.train(store, SETTING, "gbdt", hparams={"n_stages": n_stages},
               min_samples=3)
     return LatencyService(hub, default_setting=SETTING, predictor="gbdt",
-                          inference_backend=backend)
+                          inference_backend=backend, obs=obs)
 
 
 def drive(service: LatencyService, graphs, policy: BatchPolicy,
-          window: int = WINDOW):
+          window: int = WINDOW, obs: Observability = None):
     """CONCURRENCY threads push ``graphs`` through one batcher, each
     keeping up to ``window`` requests in flight (a pipelined client);
     returns (wall_s, per-request latencies, batcher stats, reports)."""
     service.clear_cache()
-    batcher = MicroBatcher(service, policy, clock=MonotonicClock(tick_s=1e-3))
+    batcher = MicroBatcher(service, policy, clock=MonotonicClock(tick_s=1e-3),
+                           obs=obs)
     index_chunks = [list(range(len(graphs)))[i::CONCURRENCY]
                     for i in range(CONCURRENCY)]
     lat = [0.0] * len(graphs)
@@ -233,6 +236,43 @@ def run(smoke: bool = False) -> None:
     assert speedup >= 5.0, \
         f"batched serving must be >=5x unbatched, got {speedup:.2f}x"
 
+    # -- instrumentation overhead: full obs on vs quiet default --------------
+    # Same batched workload with a shared Observability bundle (tracing
+    # enabled, spans on every enqueue/flush/predict, shared registry)
+    # versus the component-private quiet default.  The delta is what the
+    # observability layer costs the hot path; it must stay under 5%.
+    obs_policy = BatchPolicy(max_batch=MAX_BATCH, max_wait_ticks=2,
+                             max_queue=100_000)
+    traced_obs = Observability(seed=99)
+    traced_svc = build_service(n_train, 40, backend="numpy", obs=traced_obs)
+    traced_svc.predict_e2e(graphs[0])           # warm caches symmetrically
+    obs_trials = []
+    for _ in range(reps):
+        wall_off, lat_off, _, _ = drive(service, graphs, obs_policy)
+        wall_on, lat_on, _, _ = drive(traced_svc, graphs, obs_policy,
+                                      obs=traced_obs)
+        obs_trials.append((wall_on / wall_off,
+                           (wall_off, lat_off), (wall_on, lat_on)))
+    obs_trials.sort(key=lambda t: t[0])
+    ratio, (wall_off, lat_off), (wall_on, lat_on) = \
+        obs_trials[len(obs_trials) // 2]
+    overhead = ratio - 1.0
+    p99_off = 1e3 * float(np.percentile(lat_off, 99))
+    p99_on = 1e3 * float(np.percentile(lat_on, 99))
+    instrumentation = {
+        "quiet_req_per_s": round(n_requests / wall_off, 1),
+        "traced_req_per_s": round(n_requests / wall_on, 1),
+        "overhead_frac": round(overhead, 4),
+        "quiet_p99_ms": round(p99_off, 3),
+        "traced_p99_ms": round(p99_on, 3),
+        "p99_delta_frac": round(p99_on / p99_off - 1.0, 4),
+        "spans_recorded": len(traced_obs.tracer.export()),
+    }
+    print(f"# instrumentation overhead: {overhead:+.1%} throughput "
+          f"(p99 {p99_off:.2f} -> {p99_on:.2f} ms, tracing on)")
+    assert overhead < 0.05, \
+        f"metrics+tracing must cost <5% throughput, got {overhead:.1%}"
+
     # -- degraded mode: 10% of flushes fail, clients retry -------------------
     # Same batched policy, same graphs; a seeded FaultPlan fails 10% of
     # flushes with a retryable E_UNAVAILABLE and every client resubmits
@@ -321,6 +361,7 @@ def run(smoke: bool = False) -> None:
         "device_residency": auto_stats["device_residency"],
         "max_abs_delta_vs_numpy_s": float(np.max(deltas)),
         "degraded_mode": degraded,
+        "instrumentation_overhead": instrumentation,
     })
     if not smoke:
         assert runs.get("jax", 0) > 0, \

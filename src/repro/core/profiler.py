@@ -139,7 +139,8 @@ class ProfileSession:
     def __init__(self, *, warmup: int = 1, inner: int = 4, repeats: int = 3,
                  e2e_inner: int = 2, e2e_repeats: int = 3,
                  store: Optional[Any] = None, fn_cache_size: int = 256,
-                 latency_transform: Optional[Callable[[str, float], float]] = None):
+                 latency_transform: Optional[Callable[[str, float], float]] = None,
+                 on_measure: Optional[Callable[..., Any]] = None):
         # Compiled callables are bounded (LRU): across long suites the
         # old unbounded dict pinned every jitted op fn for the process
         # lifetime.  Latencies are scalars — they stay unbounded.
@@ -154,6 +155,13 @@ class ProfileSession:
         # device without touching the timing methodology (store-replayed
         # synthetic devices instead override the _time_* hooks below).
         self.latency_transform = latency_transform
+        # Optional hook fired once per *fresh* op measurement (cache and
+        # store hits don't fire) with
+        # ``(setting, op_type, (feature_names, feature_vals), latency_s)``
+        # — how `repro.obs.attach_session_drift` taps the profiler to
+        # feed the predicted-vs-observed drift monitor.  Hook failures
+        # never poison the measurement path.
+        self.on_measure = on_measure
         self.measured_ops = 0
         self.measured_graphs = 0
 
@@ -213,13 +221,22 @@ class ProfileSession:
             lat = float(self.latency_transform(op_type, lat))
         self.latency_cache[sig] = lat
         self.measured_ops += 1
+        feats: Optional[Tuple] = None
         if self.store is not None:
-            names, vals = get_features()
+            feats = get_features()
+            names, vals = feats
             self.store.put_op(setting, OpRecord(
                 signature=base_sig, op_type=op_type,
                 feature_names=list(names),
                 features=[float(v) for v in vals],
                 latency_s=lat, fused=list(fused)))
+        if self.on_measure is not None:
+            try:
+                self.on_measure(setting, op_type,
+                                feats if feats is not None else get_features(),
+                                lat)
+            except Exception:                 # pragma: no cover - defensive
+                log.exception("on_measure hook failed (ignored)")
         return lat
 
     def _time_op(self, graph: OpGraph, node: OpNode,

@@ -1,0 +1,79 @@
+"""Exposition formats for `MetricsRegistry` snapshots.
+
+``to_prometheus`` renders the counters/gauges/histograms of a snapshot
+in the Prometheus text exposition format (cumulative ``_bucket{le=}``
+series, ``_sum``/``_count``, ``+Inf``), deterministically ordered so
+the text of two identical snapshots is byte-identical.  Collector
+sections are JSON-shaped stats dicts, not time series — they are not
+exported to Prometheus (scrape the JSON snapshot for those).
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Any, Dict, List
+
+__all__ = ["to_prometheus", "snapshot_to_json"]
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    return _NAME_RE.sub("_", name)
+
+
+def _prom_labels(label_key: str, extra: str = "") -> str:
+    """Our canonical ``k=v,k2=v2`` label string → ``{k="v",k2="v2"}``."""
+    parts: List[str] = []
+    if label_key:
+        for pair in label_key.split(","):
+            k, _, v = pair.partition("=")
+            v = v.replace("\\", "\\\\").replace('"', '\\"')
+            parts.append(f'{_prom_name(k)}="{v}"')
+    if extra:
+        parts.append(extra)
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def _fmt(v: Any) -> str:
+    if v is None:
+        return "NaN"
+    f = float(v)
+    return str(int(f)) if f.is_integer() else repr(f)
+
+
+def to_prometheus(snapshot: Dict[str, Any]) -> str:
+    lines: List[str] = []
+    for name in sorted(snapshot.get("counters", {})):
+        pname = _prom_name(name)
+        lines.append(f"# TYPE {pname} counter")
+        series = snapshot["counters"][name]
+        for key in sorted(series):
+            lines.append(f"{pname}{_prom_labels(key)} {_fmt(series[key])}")
+    for name in sorted(snapshot.get("gauges", {})):
+        pname = _prom_name(name)
+        lines.append(f"# TYPE {pname} gauge")
+        series = snapshot["gauges"][name]
+        for key in sorted(series):
+            lines.append(f"{pname}{_prom_labels(key)} {_fmt(series[key])}")
+    for name in sorted(snapshot.get("histograms", {})):
+        pname = _prom_name(name)
+        lines.append(f"# TYPE {pname} histogram")
+        series = snapshot["histograms"][name]
+        for key in sorted(series):
+            h = series[key]
+            cum = 0
+            for edge, c in zip(h["buckets"], h["counts"]):
+                cum += c
+                le = _prom_labels(key, f'le="{_fmt(edge)}"')
+                lines.append(f"{pname}_bucket{le} {cum}")
+            le = _prom_labels(key, 'le="+Inf"')
+            lines.append(f"{pname}_bucket{le} {h['count']}")
+            lines.append(f"{pname}_sum{_prom_labels(key)} {_fmt(h['sum'])}")
+            lines.append(f"{pname}_count{_prom_labels(key)} {h['count']}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def snapshot_to_json(snapshot: Dict[str, Any]) -> str:
+    """Canonical one-line encoding (bit-stable determinism checks)."""
+    return json.dumps(snapshot, sort_keys=True, separators=(",", ":"))

@@ -48,6 +48,7 @@ from repro.core.predictors.flat import resolve_backend
 from repro.core.fusion import fuse_graph
 from repro.core.ir import OpGraph
 from repro.core.profiler import DeviceSetting, ProfileSession
+from repro.obs import Observability
 from repro.pipeline.hub import PredictorHub
 from repro.pipeline.store import ProfileStore, setting_key
 from repro.utils.logging import get_logger
@@ -107,7 +108,8 @@ class LatencyService:
     def __init__(self, hub: PredictorHub, *,
                  default_setting: Optional[DeviceSetting] = None,
                  predictor: str = "gbdt", cache_size: int = 1024,
-                 inference_backend: str = "auto"):
+                 inference_backend: str = "auto",
+                 obs: Optional[Observability] = None):
         self.hub = hub
         self.default_setting = default_setting
         self.predictor = predictor
@@ -119,15 +121,20 @@ class LatencyService:
         # never do.  Which backend each per-type call actually took is
         # recorded in ``backend_runs`` (see `stats`).
         self.inference_backend = inference_backend
-        self.backend_runs: Dict[str, int] = {}
-        # Flushes served by the fused device path (subset of the
-        # jax/pallas tallies in backend_runs).
-        self.device_fused_runs = 0
-        self.predict_batch_calls = 0
+        # Counters live in the obs registry (share one bundle across
+        # service/batcher/server for whole-system snapshots); the
+        # `backend_runs`/`cache_hits`/... properties below are views.
+        self.obs = obs or Observability.quiet()
+        self._oid = self.obs.instance("service")
+        reg = self.obs.registry
+        for name in ("service_predict_batch_calls_total",
+                     "service_cache_hits_total",
+                     "service_cache_misses_total",
+                     "service_device_fused_runs_total",
+                     "service_backend_runs_total"):
+            reg.counter(name)
         self._cache: "OrderedDict[Tuple[str, str, str], PredictionReport]" = OrderedDict()
         self._hub_version = hub.version
-        self.cache_hits = 0
-        self.cache_misses = 0
         # Guards the report cache + every counter (reentrant: _insert
         # runs under predict_batch's critical section too).
         self._lock = threading.RLock()
@@ -137,6 +144,35 @@ class LatencyService:
         # Populated by `build`; optional otherwise.
         self.store: Optional[ProfileStore] = None
         self.session: Optional[ProfileSession] = None
+
+    # -- registry-backed counters --------------------------------------------
+    def _inc(self, name: str, value: int = 1, **labels: Any) -> None:
+        self.obs.registry.inc(name, value, service=self._oid, **labels)
+
+    def _cnt(self, name: str) -> int:
+        return int(self.obs.registry.get(name, service=self._oid))
+
+    @property
+    def predict_batch_calls(self) -> int:
+        return self._cnt("service_predict_batch_calls_total")
+
+    @property
+    def cache_hits(self) -> int:
+        return self._cnt("service_cache_hits_total")
+
+    @property
+    def cache_misses(self) -> int:
+        return self._cnt("service_cache_misses_total")
+
+    @property
+    def device_fused_runs(self) -> int:
+        return self._cnt("service_device_fused_runs_total")
+
+    @property
+    def backend_runs(self) -> Dict[str, int]:
+        vals = self.obs.registry.labeled_values(
+            "service_backend_runs_total", "backend", service=self._oid)
+        return {k: int(v) for k, v in vals.items()}
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -222,8 +258,11 @@ class LatencyService:
         # Fingerprinting mutates the graph's memo slot — do it outside
         # the lock (graphs are caller-owned; the cache/counters aren't).
         fps = [g.fingerprint() for g in graphs]
+        span = self.obs.tracer.start_span(
+            "service.predict_batch",
+            attrs={"setting": skey, "family": family, "graphs": len(graphs)})
         with self._lock:
-            self.predict_batch_calls += 1
+            self._inc("service_predict_batch_calls_total")
             if self._hub_version != self.hub.version:   # bank(s) retrained
                 self._cache.clear()
                 self._hub_version = self.hub.version
@@ -234,14 +273,30 @@ class LatencyService:
                 hit = self._cache.get(ck)
                 if hit is not None:
                     self._cache.move_to_end(ck)
-                    self.cache_hits += 1
+                    self._inc("service_cache_hits_total")
                     out[i] = replace(hit, from_cache=True)
                 else:
-                    self.cache_misses += 1
+                    self._inc("service_cache_misses_total")
                     fresh.append((i, fp, g))
+        span.set_attr("fresh", len(fresh))
         if not fresh:
+            span.end()
             return out  # type: ignore[return-value]
+        try:
+            return self._predict_fresh(graphs, setting, family, skey,
+                                       out, fresh, bank_version, span)
+        except BaseException:
+            span.end("error")
+            raise
 
+    def _predict_fresh(self, graphs: Sequence[OpGraph],
+                       setting: DeviceSetting, family: str, skey: str,
+                       out: List[Optional[PredictionReport]],
+                       fresh: List[Tuple[int, str, OpGraph]],
+                       bank_version: int, span: Any
+                       ) -> List[PredictionReport]:
+        """The uncached tail of `predict_batch` (split out so the span
+        around it ends exactly once on every exit path)."""
         bank, bank_epoch = self._bank(setting, family)
         # Fused-mode scenarios are profiled (and therefore predicted) on
         # the fused graph — same rewrite GraphExecutor applies.
@@ -296,6 +351,7 @@ class LatencyService:
                 if self._hub_version == bank_version:
                     self._insert((fp, skey, family), report)
             out[i] = report
+        span.end()
         return out  # type: ignore[return-value]
 
     def cache_peek(self, graph: OpGraph,
@@ -320,7 +376,7 @@ class LatencyService:
             if hit is None:
                 return None
             self._cache.move_to_end(ck)
-            self.cache_hits += 1
+            self._inc("service_cache_hits_total")
             return replace(hit, from_cache=True)
 
     def predict_multi(self, graphs: Sequence[OpGraph],
@@ -369,14 +425,18 @@ class LatencyService:
         flat_model = model.tree_model() if hasattr(model, "tree_model") \
             else None
         if flat_model is None:
-            with self._lock:
-                self.backend_runs["direct"] = \
-                    self.backend_runs.get("direct", 0) + 1
+            self._inc("service_backend_runs_total", backend="direct")
+            self.obs.tracer.event("service.kernel",
+                                  attrs={"op_type": op_type or "",
+                                         "backend": "direct"})
             return model.predict(host_x())
         n_rows = (len(x) if group is None
                   else sum(len(gf.matrix[op_type]) for gf in group))
         backend = resolve_backend(self.inference_backend,
                                   n_rows * flat_model.flat().n_trees)
+        span = self.obs.tracer.start_span(
+            "service.kernel", attrs={"op_type": op_type or "",
+                                     "backend": backend, "rows": n_rows})
         # Device tiers on an unwrapped tree model take the fused path:
         # standardize → traverse → reduce → clamp in one device program
         # on the resident bank, fed float32 feature matrices with no
@@ -391,11 +451,15 @@ class LatencyService:
                 and red_fn is not None and red_fn() is not None):
             ms = [gf.matrix32(op_type) for gf in group]
             x32 = ms[0] if len(ms) == 1 else np.concatenate(ms, axis=0)
-            preds = model.predict_on_device(x32, backend=backend)
-            with self._lock:
-                self.backend_runs[backend] = \
-                    self.backend_runs.get(backend, 0) + 1
-                self.device_fused_runs += 1
+            try:
+                preds = model.predict_on_device(x32, backend=backend)
+            except BaseException:
+                span.end("error")
+                raise
+            self._inc("service_backend_runs_total", backend=backend)
+            self._inc("service_device_fused_runs_total")
+            span.set_attr("fused", True)
+            span.end()
             return preds
         # The knob is model state shared by every thread serving this
         # bank — swap, predict, and restore as one atomic section.  The
@@ -405,15 +469,19 @@ class LatencyService:
         xh = host_x()
         swap_lock = getattr(flat_model, "backend_swap_lock",
                             self._backend_lock)
-        with swap_lock:
-            prev = flat_model.inference_backend
-            flat_model.inference_backend = backend
-            try:
-                preds = model.predict(xh)
-            finally:
-                flat_model.inference_backend = prev
-        with self._lock:
-            self.backend_runs[backend] = self.backend_runs.get(backend, 0) + 1
+        try:
+            with swap_lock:
+                prev = flat_model.inference_backend
+                flat_model.inference_backend = backend
+                try:
+                    preds = model.predict(xh)
+                finally:
+                    flat_model.inference_backend = prev
+        except BaseException:
+            span.end("error")
+            raise
+        self._inc("service_backend_runs_total", backend=backend)
+        span.end()
         return preds
 
     # -- introspection -------------------------------------------------------

@@ -40,6 +40,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.ir import OpGraph
 from repro.core.profiler import DeviceSetting
+from repro.obs import DEFAULT_SIZE_BUCKETS, Observability
 from repro.pipeline.service import PredictionReport
 from repro.pipeline.store import setting_key
 from repro.rpc.protocol import (E_INTERNAL, E_OVERLOADED, E_TIMEOUT,
@@ -113,14 +114,16 @@ class PendingResult:
     to detect duplicated responses rather than masking them.
     """
 
-    __slots__ = ("_event", "_lock", "_report", "_error", "_callbacks")
+    __slots__ = ("_event", "_lock", "_report", "_error", "_callbacks",
+                 "_obs")
 
-    def __init__(self) -> None:
+    def __init__(self, obs: Optional[Any] = None) -> None:
         self._event = threading.Event()
         self._lock = threading.Lock()
         self._report: Optional[PredictionReport] = None
         self._error: Optional[RPCError] = None
         self._callbacks: List[Callable[["PendingResult"], None]] = []
+        self._obs = obs            # flight-recorder dumps on deadline misses
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -160,6 +163,8 @@ class PendingResult:
         """The report (blocking); raises the request's `RPCError` on
         failure or a retryable ``timeout`` error if not settled in time."""
         if not self._event.wait(timeout):
+            if self._obs is not None:
+                self._obs.dump("deadline_timeout", timeout_s=timeout)
             raise RPCError(E_TIMEOUT,
                            f"request not answered within {timeout}s")
         if self._error is not None:
@@ -224,7 +229,8 @@ class MicroBatcher:
 
     def __init__(self, service: Any, policy: Optional[BatchPolicy] = None, *,
                  clock: Optional[Any] = None, auto_start: bool = True,
-                 chaos: Optional[Any] = None):
+                 chaos: Optional[Any] = None,
+                 obs: Optional[Observability] = None):
         self.service = service
         self.policy = policy or BatchPolicy()
         self.clock = clock or MonotonicClock()
@@ -238,23 +244,24 @@ class MicroBatcher:
         self._seq = 0
         self._queued = 0
         self._closed = False
-        # Counters (all mutated under _cond).
-        self.submitted = 0
-        self.answered = 0
-        self.failed = 0
-        self.rejected = 0
-        self.shed_cache_only = 0    # fresh work shed in the cache_only tier
-        self.shed_rejected = 0      # everything shed in the reject tier
-        self.wedged_flushes = 0     # chaos-wedged batches (requeued, retried)
-        self.short_circuits = 0
-        self.batches = 0
-        self.batched_requests = 0
-        self.max_batch_observed = 0
-        # Which resolved tree backend served flushes: per-flush deltas of
-        # the service's backend_runs tally (numpy / jax / pallas /
-        # direct), so the RPC stats path can answer "which kernel
-        # actually served my batch" without a service round-trip.
-        self.flush_backends: Dict[str, int] = {}
+        # All counters live in the obs registry (shared with the server
+        # and any other component handed the same bundle — the `metrics`
+        # RPC endpoint's single-snapshot accounting depends on that).
+        # `stats()` stays the same dict it always was, as a view.
+        self.obs = obs or Observability.quiet()
+        self._mid = self.obs.instance("batcher")
+        reg = self.obs.registry
+        for name in ("submitted", "answered", "failed", "rejected",
+                     "shed_cache_only", "shed_rejected", "wedged_flushes",
+                     "short_circuits", "batches", "batched_requests"):
+            reg.counter(f"rpc_batcher_{name}_total")
+        reg.counter("rpc_flush_backend_total")
+        reg.gauge("rpc_batcher_queue_depth")
+        reg.gauge("rpc_batcher_max_batch")
+        reg.histogram("rpc_batcher_flush_batch_size",
+                      buckets=DEFAULT_SIZE_BUCKETS)
+        reg.histogram("rpc_batcher_flush_duration")
+        reg.set("rpc_batcher_queue_depth", 0, batcher=self._mid)
         if hasattr(self.clock, "subscribe"):
             self.clock.subscribe(self._wake)
         self._worker: Optional[threading.Thread] = None
@@ -262,6 +269,28 @@ class MicroBatcher:
             self._worker = threading.Thread(
                 target=self._run, name="rpc-batcher", daemon=True)
             self._worker.start()
+
+    # -- metrics plumbing -----------------------------------------------------
+    def _inc(self, name: str, value: int = 1, **labels: Any) -> None:
+        self.obs.registry.inc(f"rpc_batcher_{name}_total", value,
+                              batcher=self._mid, **labels)
+
+    def _cnt(self, name: str) -> int:
+        return int(self.obs.registry.get(f"rpc_batcher_{name}_total",
+                                         batcher=self._mid))
+
+    def _set_depth_locked(self) -> None:
+        self.obs.registry.set("rpc_batcher_queue_depth", self._queued,
+                              batcher=self._mid)
+
+    def flush_latency_quantiles(self) -> Dict[str, float]:
+        """p50/p99 of flush durations (in the obs clock's units) — the
+        `health` endpoint's compact latency summary."""
+        reg = self.obs.registry
+        return {"p50": reg.hist_quantile("rpc_batcher_flush_duration", 0.5,
+                                         batcher=self._mid),
+                "p99": reg.hist_quantile("rpc_batcher_flush_duration", 0.99,
+                                         batcher=self._mid)}
 
     # -- submission -----------------------------------------------------------
     def _shed_tier_locked(self, now: int) -> str:
@@ -301,8 +330,11 @@ class MicroBatcher:
             if tier == "reject":
                 # Deep overload with a stalled queue: reject before even
                 # touching the report cache — the cheapest possible "no".
-                self.rejected += 1
-                self.shed_rejected += 1
+                self._inc("rejected")
+                self._inc("shed_rejected")
+                self.obs.tracer.event("rpc.batcher.shed",
+                                      attrs={"tier": tier,
+                                             "queued": self._queued})
                 raise RPCError(
                     E_OVERLOADED,
                     f"shedding all work (tier reject: {self._queued}/"
@@ -312,13 +344,13 @@ class MicroBatcher:
         # a hot graph neither queue nor count against max_queue.
         hit = self.service.cache_peek(graph, setting, family)
         if hit is not None:
-            pending = PendingResult()
+            pending = PendingResult(self.obs)
             with self._cond:
                 if self._closed:
                     raise RPCError(E_UNAVAILABLE, "batcher is closed")
-                self.submitted += 1
-                self.short_circuits += 1
-                self.answered += 1
+                self._inc("submitted")
+                self._inc("short_circuits")
+                self._inc("answered")
             pending._resolve(hit)
             return pending
         key = (setting_key(setting), family)
@@ -327,15 +359,18 @@ class MicroBatcher:
                 raise RPCError(E_UNAVAILABLE, "batcher is closed")
             tier = self._shed_tier_locked(self.clock.now())
             if tier != "accept":
-                self.rejected += 1
-                self.shed_cache_only += 1
+                self._inc("rejected")
+                self._inc("shed_cache_only")
+                self.obs.tracer.event("rpc.batcher.shed",
+                                      attrs={"tier": tier,
+                                             "queued": self._queued})
                 raise RPCError(
                     E_OVERLOADED,
                     f"shedding fresh work (tier {tier}: {self._queued}/"
                     f"{self.policy.max_queue} requests pending; cached "
                     f"graphs still served)")
             if self._queued >= self.policy.max_queue:   # hard backstop
-                self.rejected += 1
+                self._inc("rejected")
                 raise RPCError(
                     E_OVERLOADED,
                     f"queue full ({self._queued}/{self.policy.max_queue} "
@@ -344,10 +379,15 @@ class MicroBatcher:
             entry = _Entry(
                 seq=self._seq, graph=graph, setting=setting, family=family,
                 deadline=self.clock.now() + self.policy.max_wait_ticks,
-                pending=PendingResult())
+                pending=PendingResult(self.obs))
             self._groups.setdefault(key, deque()).append(entry)
             self._queued += 1
-            self.submitted += 1
+            self._inc("submitted")
+            self._set_depth_locked()
+            self.obs.tracer.event("rpc.batcher.enqueue",
+                                  attrs={"group": f"{key[0]}/{key[1]}",
+                                         "seq": entry.seq,
+                                         "queued": self._queued})
             self._cond.notify_all()
         return entry.pending
 
@@ -368,6 +408,7 @@ class MicroBatcher:
         if q is not None and not q:
             del self._groups[key]
         self._queued -= len(batch)
+        self._set_depth_locked()
         return batch
 
     def _requeue(self, batch: List[_Entry]) -> None:
@@ -378,17 +419,26 @@ class MicroBatcher:
             q = self._groups.setdefault(key, deque())
             q.extendleft(reversed(batch))
             self._queued += len(batch)
-            self.wedged_flushes += 1
+            self._inc("wedged_flushes")
+            self._set_depth_locked()
             self._cond.notify_all()
+        self.obs.dump("wedged_flush",
+                      group=f"{key[0]}/{key[1]}", size=len(batch))
 
     def _flush(self, batch: List[_Entry]) -> int:
         """One `predict_batch` for one group batch; resolve positionally.
         Returns the number of requests settled (0 if the flush wedged
         and the batch was requeued)."""
+        reg = self.obs.registry
+        group = f"{setting_key(batch[0].setting)}/{batch[0].family}"
+        span = self.obs.tracer.start_span(
+            "rpc.batcher.flush", attrs={"group": group, "size": len(batch)})
         if self.chaos is not None:
             fault = self.chaos.decide("flush")
             if fault is not None:
                 if fault.kind == "wedge":
+                    span.set_attr("wedged", True)
+                    span.end("error")
                     self._requeue(batch)
                     return 0
                 if fault.kind == "delay":
@@ -396,9 +446,16 @@ class MicroBatcher:
                 elif fault.kind == "error":
                     err = fault.to_error()
                     with self._cond:
-                        self.batches += 1
-                        self.batched_requests += len(batch)
-                        self.failed += len(batch)
+                        self._inc("batches")
+                        self._inc("batched_requests", len(batch))
+                        self._inc("failed", len(batch))
+                        reg.observe("rpc_batcher_flush_batch_size",
+                                    len(batch), batcher=self._mid)
+                    span.set_attr("chaos", err.code)
+                    span.end("error")
+                    self.obs.dump("chaos_fault", site="flush",
+                                  code=err.code, group=group,
+                                  size=len(batch))
                     for e in batch:
                         e.pending._fail(err)
                     return len(batch)
@@ -409,9 +466,13 @@ class MicroBatcher:
         # totals stay exact, attribution is per-flush best-effort.)
         counts_fn = getattr(self.service, "backend_run_counts", None)
         before = counts_fn() if callable(counts_fn) else None
+        t0 = self.obs.now()
         try:
-            reports = self.service.predict_batch(
-                graphs, batch[0].setting, batch[0].family)
+            # Ambient-activate the flush span so the service's
+            # predict_batch / kernel spans parent under it.
+            with self.obs.tracer.activate(span):
+                reports = self.service.predict_batch(
+                    graphs, batch[0].setting, batch[0].family)
             if len(reports) != len(batch):        # defensive: cross-wiring
                 raise RuntimeError(
                     f"predict_batch returned {len(reports)} reports for "
@@ -425,25 +486,34 @@ class MicroBatcher:
         except Exception as exc:
             err = RPCError(E_INTERNAL, f"{type(exc).__name__}: {exc}")
             reports = None
+        dt = self.obs.now() - t0
         after = counts_fn() if before is not None else None
         with self._cond:
-            self.batches += 1
-            self.batched_requests += len(batch)
-            self.max_batch_observed = max(self.max_batch_observed, len(batch))
+            self._inc("batches")
+            self._inc("batched_requests", len(batch))
+            reg.set_max("rpc_batcher_max_batch", len(batch),
+                        batcher=self._mid)
+            reg.observe("rpc_batcher_flush_batch_size", len(batch),
+                        batcher=self._mid)
+            reg.observe("rpc_batcher_flush_duration", dt, batcher=self._mid)
             if after is not None:
                 for k, v in after.items():
                     d = v - before.get(k, 0)
                     if d > 0:
-                        self.flush_backends[k] = \
-                            self.flush_backends.get(k, 0) + d
+                        reg.inc("rpc_flush_backend_total", d,
+                                backend=k, batcher=self._mid)
+                        span.set_attr("backend", k)
             if reports is None:
-                self.failed += len(batch)
+                self._inc("failed", len(batch))
             else:
-                self.answered += len(batch)
+                self._inc("answered", len(batch))
         if reports is None:
+            span.set_attr("error", err.code)
+            span.end("error")
             for e in batch:
                 e.pending._fail(err)
         else:
+            span.end()
             for e, r in zip(batch, reports):
                 e.pending._resolve(r)
         return len(batch)
@@ -525,7 +595,9 @@ class MicroBatcher:
             leftovers = [e for q in self._groups.values() for e in q]
             self._groups.clear()
             self._queued = 0
-            self.failed += len(leftovers)
+            if leftovers:
+                self._inc("failed", len(leftovers))
+            self._set_depth_locked()
         err = RPCError(E_UNAVAILABLE, "batcher closed before flush")
         for e in leftovers:
             e.pending._fail(err)
@@ -540,31 +612,79 @@ class MicroBatcher:
         with self._cond:
             return self._queued
 
+    # Registry-backed counter views: the numbers live in the obs
+    # registry (one source of truth for stats(), the metrics endpoint,
+    # and Prometheus exposition); these properties keep the original
+    # attribute API intact.
+    @property
+    def submitted(self) -> int: return self._cnt("submitted")
+
+    @property
+    def answered(self) -> int: return self._cnt("answered")
+
+    @property
+    def failed(self) -> int: return self._cnt("failed")
+
+    @property
+    def rejected(self) -> int: return self._cnt("rejected")
+
+    @property
+    def shed_cache_only(self) -> int: return self._cnt("shed_cache_only")
+
+    @property
+    def shed_rejected(self) -> int: return self._cnt("shed_rejected")
+
+    @property
+    def wedged_flushes(self) -> int: return self._cnt("wedged_flushes")
+
+    @property
+    def short_circuits(self) -> int: return self._cnt("short_circuits")
+
+    @property
+    def batches(self) -> int: return self._cnt("batches")
+
+    @property
+    def batched_requests(self) -> int: return self._cnt("batched_requests")
+
+    @property
+    def max_batch_observed(self) -> int:
+        return int(self.obs.registry.get("rpc_batcher_max_batch",
+                                         batcher=self._mid))
+
+    @property
+    def flush_backends(self) -> Dict[str, int]:
+        vals = self.obs.registry.labeled_values(
+            "rpc_flush_backend_total", "backend", batcher=self._mid)
+        return {k: int(v) for k, v in vals.items()}
+
     def stats(self) -> Dict[str, Any]:
         with self._cond:
-            return {
-                "submitted": self.submitted,
-                "answered": self.answered,
-                "failed": self.failed,
-                "rejected": self.rejected,
-                "shed_tier": self._shed_tier_locked(self.clock.now()),
-                "shed_cache_only": self.shed_cache_only,
-                "shed_rejected": self.shed_rejected,
-                "wedged_flushes": self.wedged_flushes,
-                "short_circuits": self.short_circuits,
-                "batches": self.batches,
-                "batched_requests": self.batched_requests,
-                "max_batch_observed": self.max_batch_observed,
-                "flush_backends": dict(self.flush_backends),
-                "avg_batch": (self.batched_requests / self.batches
-                              if self.batches else 0.0),
-                "queued": self._queued,
-                "policy": {"max_batch": self.policy.max_batch,
-                           "max_wait_ticks": self.policy.max_wait_ticks,
-                           "max_queue": self.policy.max_queue,
-                           "shed_frac": self.policy.shed_frac,
-                           "shed_reject_ticks": self.policy.shed_reject_ticks},
-            }
+            shed_tier = self._shed_tier_locked(self.clock.now())
+            queued = self._queued
+        batches = self.batches
+        batched = self.batched_requests
+        return {
+            "submitted": self.submitted,
+            "answered": self.answered,
+            "failed": self.failed,
+            "rejected": self.rejected,
+            "shed_tier": shed_tier,
+            "shed_cache_only": self.shed_cache_only,
+            "shed_rejected": self.shed_rejected,
+            "wedged_flushes": self.wedged_flushes,
+            "short_circuits": self.short_circuits,
+            "batches": batches,
+            "batched_requests": batched,
+            "max_batch_observed": self.max_batch_observed,
+            "flush_backends": self.flush_backends,
+            "avg_batch": (batched / batches if batches else 0.0),
+            "queued": queued,
+            "policy": {"max_batch": self.policy.max_batch,
+                       "max_wait_ticks": self.policy.max_wait_ticks,
+                       "max_queue": self.policy.max_queue,
+                       "shed_frac": self.policy.shed_frac,
+                       "shed_reject_ticks": self.policy.shed_reject_ticks},
+        }
 
 
 __all__ = ["BatchPolicy", "ManualClock", "MicroBatcher", "MonotonicClock",

@@ -33,6 +33,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.ir import OpGraph
 from repro.core.profiler import DeviceSetting
+from repro.obs import Observability
 from repro.pipeline.service import PredictionReport
 from repro.rpc.protocol import (E_TIMEOUT, E_UNAVAILABLE, Request, Response,
                                 RPCError, decode_response, encode_request,
@@ -61,7 +62,8 @@ class LatencyClient:
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[CircuitBreaker] = None,
                  sleep: Callable[[float], None] = time.sleep,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 obs: Optional[Observability] = None):
         self.host = host
         self.port = int(port)
         self.timeout = float(timeout)
@@ -76,8 +78,16 @@ class LatencyClient:
         self._plock = threading.Lock()
         self._ids = itertools.count(1)
         self._closed = False
-        self.reconnects = 0        # successful re-connections
-        self.retries = 0           # retried calls (via retry policies)
+        # Counters in the obs registry; with a *shared* bundle and a
+        # tracing-enabled tracer, every `send` opens a span whose
+        # context rides the request's optional ``trace`` field.
+        self.obs = obs or Observability.quiet()
+        self._cid = self.obs.instance("client")
+        for name in ("rpc_client_requests_total",
+                     "rpc_client_reconnects_total",
+                     "rpc_client_retries_total",
+                     "rpc_client_timeouts_total"):
+            self.obs.registry.counter(name)
         # Connection state — all guarded by _conn_lock.  _gen counts
         # connections; a reader thread belongs to exactly one gen.
         self._conn_lock = threading.Lock()
@@ -154,7 +164,10 @@ class LatencyClient:
                     E_UNAVAILABLE,
                     f"reconnect to {self.host}:{self.port} failed: "
                     f"{exc}") from None
-            self.reconnects += 1
+            self.obs.registry.inc("rpc_client_reconnects_total",
+                                  client=self._cid)
+            self.obs.tracer.event("rpc.client.reconnect",
+                                  attrs={"gen": self._gen})
             log.info("reconnected to %s:%d (gen %d)",
                      self.host, self.port, self._gen)
 
@@ -224,8 +237,13 @@ class LatencyClient:
         slot = _Slot(gen)
         with self._plock:
             self._pending[rid] = slot
+        self.obs.registry.inc("rpc_client_requests_total",
+                              client=self._cid, method=method)
+        span = self.obs.tracer.start_span(
+            "rpc.client.send", attrs={"method": method, "id": rid})
         line = encode_request(Request(id=rid, method=method,
-                                      params=params or {}))
+                                      params=params or {},
+                                      trace=self.obs.tracer.wire_context(span)))
         try:
             with self._wlock:
                 wfile.write((line + "\n").encode())
@@ -236,8 +254,10 @@ class LatencyClient:
             with self._conn_lock:
                 if gen == self._gen:
                     self._connected = False
+            span.end("error")
             raise RPCError(E_UNAVAILABLE,
                            "connection lost during send") from None
+        span.end()
         return slot
 
     def wait(self, slot: _Slot,
@@ -245,6 +265,11 @@ class LatencyClient:
         """Block for a slot's result payload; raises the typed error the
         server sent (or ``timeout``)."""
         if not slot.event.wait(self.timeout if timeout is None else timeout):
+            self.obs.registry.inc("rpc_client_timeouts_total",
+                                  client=self._cid)
+            self.obs.dump("deadline_timeout",
+                          timeout_s=self.timeout if timeout is None
+                          else timeout)
             raise RPCError(E_TIMEOUT, "no response from server")
         resp = slot.response
         assert resp is not None
@@ -277,11 +302,27 @@ class LatencyClient:
             t = budget_s if timeout is None else min(timeout, budget_s)
             return self.wait(self.send(method, params), t)
 
-        def note(_attempt_no: int, _err: RPCError, _delay: float) -> None:
-            self.retries += 1
+        def note(attempt_no: int, err: RPCError, delay: float) -> None:
+            self.obs.registry.inc("rpc_client_retries_total",
+                                  client=self._cid)
+            self.obs.tracer.event("rpc.client.retry",
+                                  attrs={"method": method,
+                                         "attempt": attempt_no,
+                                         "code": err.code, "delay": delay})
 
         return retry_call(attempt, pol, sleep=self._sleep, clock=self._clock,
                           breaker=self.breaker, on_retry=note)
+
+    # Registry-backed views of the original counter attributes.
+    @property
+    def reconnects(self) -> int:
+        return int(self.obs.registry.get("rpc_client_reconnects_total",
+                                         client=self._cid))
+
+    @property
+    def retries(self) -> int:
+        return int(self.obs.registry.get("rpc_client_retries_total",
+                                         client=self._cid))
 
     # -- the service-shaped API ----------------------------------------------
     @staticmethod
@@ -342,6 +383,18 @@ class LatencyClient:
     def health(self) -> Dict[str, Any]:
         """Server degradation state: shed tier, queue depth, bank epochs."""
         return self.call("health")
+
+    def metrics(self, *, format: Optional[str] = None,
+                dumps: bool = False) -> Dict[str, Any]:
+        """The server's full observability snapshot (``format="prometheus"``
+        for text exposition; ``dumps=True`` includes flight-recorder
+        fault dumps)."""
+        params: Dict[str, Any] = {}
+        if format is not None:
+            params["format"] = format
+        if dumps:
+            params["dumps"] = True
+        return self.call("metrics", params)
 
     def rollover(self, setting: Any, bank: Any,
                  family: Optional[str] = None) -> Dict[str, Any]:

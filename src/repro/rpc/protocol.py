@@ -27,6 +27,13 @@ Methods (params → result):
     health         {} → {status, shed_tier, queued, queue_capacity,
                          hub_epoch, bank_epochs}
     rollover       {setting, family?, bank} → {setting, family, epoch}
+    metrics        {format?, dumps?} → {snapshot} | {text}
+
+Either envelope may carry an optional ``trace`` field —
+``{"tid": <trace id>, "sid": <span id>}`` — propagating a request's
+trace context across the wire (`repro.obs.tracing`).  The field is
+omitted entirely when absent, so peers that predate it (and the
+golden files that pin v1 bytes) are unaffected.
 
 Graphs travel as `OpGraph.to_json()`; device settings as either their
 canonical key string (``"device:dtype/mode"`` / ``"dtype/mode"``) or a
@@ -49,7 +56,7 @@ from repro.pipeline.store import setting_key
 PROTOCOL_VERSION = 1
 
 METHODS = ("predict", "predict_multi", "available", "stats", "search_front",
-           "health", "rollover")
+           "health", "rollover", "metrics")
 
 # -- typed error codes --------------------------------------------------------
 E_BAD_REQUEST = "bad_request"          # malformed JSON / missing fields
@@ -87,16 +94,39 @@ class RPCError(Exception):
                    retryable=bool(d.get("retryable", False)))
 
 
+def _decode_trace(obj: Dict[str, Any]) -> Optional[Dict[str, str]]:
+    """Validate an optional envelope ``trace`` field ({"tid", "sid"})."""
+    trace = obj.get("trace")
+    if trace is None:
+        return None
+    if not isinstance(trace, dict) or not isinstance(trace.get("tid"), str):
+        raise RPCError(E_BAD_REQUEST,
+                       "'trace' must be an object with string 'tid'")
+    sid = trace.get("sid")
+    if sid is not None and not isinstance(sid, str):
+        raise RPCError(E_BAD_REQUEST, "'trace.sid' must be a string")
+    out = {"tid": trace["tid"]}
+    if sid is not None:
+        out["sid"] = sid
+    return out
+
+
 @dataclass(frozen=True)
 class Request:
     id: str
     method: str
     params: Dict[str, Any] = field(default_factory=dict)
     v: int = PROTOCOL_VERSION
+    # Optional trace propagation context; never serialized when None so
+    # pre-trace peers and golden bytes are untouched.
+    trace: Optional[Dict[str, str]] = None
 
     def to_json(self) -> Dict[str, Any]:
-        return {"v": self.v, "id": self.id, "method": self.method,
-                "params": self.params}
+        d: Dict[str, Any] = {"v": self.v, "id": self.id,
+                             "method": self.method, "params": self.params}
+        if self.trace is not None:
+            d["trace"] = self.trace
+        return d
 
 
 @dataclass(frozen=True)
@@ -106,6 +136,7 @@ class Response:
     result: Optional[Dict[str, Any]] = None
     error: Optional[RPCError] = None
     v: int = PROTOCOL_VERSION
+    trace: Optional[Dict[str, str]] = None
 
     def to_json(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {"v": self.v, "id": self.id, "ok": self.ok}
@@ -114,6 +145,8 @@ class Response:
         else:
             err = self.error or RPCError(E_INTERNAL, "unspecified error")
             d["error"] = err.to_json()
+        if self.trace is not None:
+            d["trace"] = self.trace
         return d
 
 
@@ -165,7 +198,8 @@ def decode_request(line: str) -> Request:
     params = obj.get("params", {})
     if not isinstance(params, dict):
         raise RPCError(E_BAD_REQUEST, "request 'params' must be an object")
-    return Request(id=str(rid), method=method, params=params, v=obj["v"])
+    return Request(id=str(rid), method=method, params=params, v=obj["v"],
+                   trace=_decode_trace(obj))
 
 
 def decode_response(line: str) -> Response:
@@ -175,17 +209,18 @@ def decode_response(line: str) -> Response:
     ok = obj.get("ok")
     if not isinstance(ok, bool):
         raise RPCError(E_BAD_REQUEST, "response 'ok' must be a boolean")
+    trace = _decode_trace(obj)
     if ok:
         result = obj.get("result")
         if not isinstance(result, dict):
             raise RPCError(E_BAD_REQUEST, "ok response must carry 'result'")
         return Response(id=None if rid is None else str(rid), ok=True,
-                        result=result, v=obj["v"])
+                        result=result, v=obj["v"], trace=trace)
     err = obj.get("error")
     if not isinstance(err, dict):
         raise RPCError(E_BAD_REQUEST, "error response must carry 'error'")
     return Response(id=None if rid is None else str(rid), ok=False,
-                    error=RPCError.from_json(err), v=obj["v"])
+                    error=RPCError.from_json(err), v=obj["v"], trace=trace)
 
 
 def request_id_of(line: str) -> Optional[str]:

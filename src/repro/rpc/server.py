@@ -28,7 +28,10 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from dataclasses import replace as _dc_replace
+
 from repro.core.composition import PredictorBank
+from repro.obs import Observability, to_prometheus
 from repro.rpc.batcher import BatchPolicy, MicroBatcher, PendingResult
 from repro.rpc.protocol import (E_BAD_REQUEST, E_INTERNAL, E_UNAVAILABLE,
                                 E_UNKNOWN_METHOD, E_UNKNOWN_SETTING,
@@ -85,6 +88,7 @@ class LatencyRPCServer:
                  auto_start_batcher: bool = True,
                  search_report: Any = None,
                  chaos: Optional[Any] = None,
+                 obs: Optional[Observability] = None,
                  host: str = "127.0.0.1", port: int = 0):
         self.service = service
         # Optional `repro.rpc.chaos.FaultPlan`: consulted per dispatch
@@ -93,9 +97,16 @@ class LatencyRPCServer:
         # connections).  A server-owned batcher shares the same plan
         # for its "flush" site.
         self.chaos = chaos
+        # With an explicit obs bundle the server traces dispatches,
+        # echoes wire trace contexts, and adds the compact metrics
+        # summary to `health`; without one it keeps a quiet private
+        # bundle (absent-by-default keeps pre-obs response shapes and
+        # golden bytes intact).
+        self._obs_explicit = obs is not None
+        self.obs = obs or Observability.quiet()
         self.batcher = batcher or MicroBatcher(
             service, policy, clock=clock, auto_start=auto_start_batcher,
-            chaos=chaos)
+            chaos=chaos, obs=self.obs)
         self._owns_batcher = batcher is None
         self.host, self.port = host, int(port)
         self._sock: Optional[socket.socket] = None
@@ -109,6 +120,31 @@ class LatencyRPCServer:
         self._front: Optional[Dict[str, Any]] = None
         if search_report is not None:
             self.register_search_report(search_report)
+        self._register_collectors()
+
+    def _register_collectors(self) -> None:
+        """Join every component's pre-existing ``stats()`` view into the
+        one registry snapshot the `metrics` endpoint serves."""
+        reg = self.obs.registry
+        if hasattr(self.service, "stats"):
+            reg.collect("service", self.service.stats)
+        if not self._owns_batcher or self.batcher.obs is not self.obs:
+            # External batcher with its own registry: pull its stats.
+            reg.collect("batcher", self.batcher.stats)
+        if self.chaos is not None and hasattr(self.chaos, "stats"):
+            reg.collect("chaos", self.chaos.stats)
+        session = getattr(self.service, "session", None)
+        if session is not None and hasattr(session, "stats"):
+            reg.collect("profiler", session.stats)
+        store = getattr(self.service, "store", None)
+        if store is not None and hasattr(store, "stats"):
+            reg.collect("store", store.stats)
+        try:
+            from repro.kernels.tree_gather import residency_counters
+            reg.collect("tree_gather", residency_counters)
+        except Exception:                             # pragma: no cover
+            pass
+        reg.collect("server", self._server_stats)
 
     # -- search-front endpoint ------------------------------------------------
     def register_search_report(self, report: Any) -> None:
@@ -130,20 +166,46 @@ class LatencyRPCServer:
     def dispatch(self, req: Request,
                  respond: Callable[[Response], None]) -> None:
         """Route one decoded request; ``respond`` is called exactly once
-        (possibly later, from a batcher flush, for ``predict``)."""
+        (possibly later, from a batcher flush, for ``predict``).
+
+        A request carrying a ``trace`` context gets a dispatch span
+        parented to it, and the response echoes this server's span
+        context back (``Response.trace``) — so a traced client can
+        stitch the full client→server→flush tree.  Untraced requests
+        produce untraced responses, byte-identical to the pre-obs wire.
+        """
+        span = self.obs.tracer.start_span(
+            "rpc.server.dispatch", trace=req.trace,
+            attrs={"method": req.method, "id": req.id})
+        echo = (self.obs.tracer.wire_context(span)
+                if req.trace is not None else None)
+
+        def reply(resp: Response, status: str = "ok") -> None:
+            if echo is not None:
+                resp = _dc_replace(resp, trace=echo)
+            span.end(status)
+            respond(resp)
+
         try:
             if self.chaos is not None:
                 fault = self.chaos.decide("dispatch")
                 if fault is not None:
                     if fault.kind == "error":
                         self._count_error()
-                        respond(Response(id=req.id, ok=False,
-                                         error=fault.to_error()))
+                        self.obs.dump("chaos_fault", site="dispatch",
+                                      code=fault.to_error().code,
+                                      method=req.method)
+                        reply(Response(id=req.id, ok=False,
+                                       error=fault.to_error()), "error")
                         return
                     if fault.kind == "delay":
                         time.sleep(fault.delay_s)
             if req.method == "predict":
-                self._predict_async(req, respond)
+                # Ambient-activate the dispatch span so the batcher's
+                # enqueue/shed events (emitted on this thread inside
+                # submit()) parent under it.
+                with self.obs.tracer.activate(span):
+                    self._predict_async(req, reply)
                 return
             handler = {
                 "predict_multi": self._predict_multi,
@@ -152,16 +214,17 @@ class LatencyRPCServer:
                 "search_front": self._search_front,
                 "health": self._health,
                 "rollover": self._rollover,
+                "metrics": self._metrics,
             }.get(req.method)
             if handler is None:
                 known = ", ".join(METHODS)
                 raise RPCError(E_UNKNOWN_METHOD,
                                f"unknown method {req.method!r} "
                                f"(known: {known})", retryable=False)
-            respond(Response(id=req.id, ok=True, result=handler(req.params)))
+            reply(Response(id=req.id, ok=True, result=handler(req.params)))
         except RPCError as exc:
             self._count_error()
-            respond(Response(id=req.id, ok=False, error=exc))
+            reply(Response(id=req.id, ok=False, error=exc), "error")
         except Exception as exc:
             # Every unexpected handler exception leaves as a well-formed
             # typed envelope — a crash mid-handler must never kill the
@@ -169,16 +232,17 @@ class LatencyRPCServer:
             # (tests/test_rpc.py pins this envelope).
             log.exception("request %s failed", req.id)
             self._count_error()
-            respond(Response(id=req.id, ok=False,
-                             error=RPCError(E_INTERNAL,
-                                            f"{type(exc).__name__}: {exc}")))
+            reply(Response(id=req.id, ok=False,
+                           error=RPCError(E_INTERNAL,
+                                          f"{type(exc).__name__}: {exc}")),
+                  "error")
 
     def _count_error(self) -> None:
         with self._lock:
             self.errors += 1
 
     def _predict_async(self, req: Request,
-                       respond: Callable[[Response], None]) -> None:
+                       respond: Callable[..., None]) -> None:
         params = req.params
         if "graph" not in params:
             raise RPCError(E_BAD_REQUEST, "predict needs params.graph")
@@ -193,7 +257,7 @@ class LatencyRPCServer:
             err = p.error()
             if err is not None:
                 self._count_error()
-                respond(Response(id=rid, ok=False, error=err))
+                respond(Response(id=rid, ok=False, error=err), "error")
             else:
                 respond(Response(id=rid, ok=True,
                                  result={"report": p.result(0).to_json()}))
@@ -223,13 +287,37 @@ class LatencyRPCServer:
     def _available(self, params: Dict[str, Any]) -> Dict[str, Any]:
         return {"banks": [list(b) for b in self.service.available()]}
 
-    def _stats(self, params: Dict[str, Any]) -> Dict[str, Any]:
+    def _server_stats(self) -> Dict[str, Any]:
         with self._lock:
-            server = {"requests": self.requests, "errors": self.errors,
-                      "connections": self.connections,
-                      "protocol_version": PROTOCOL_VERSION}
-        return {"server": server, "batcher": self.batcher.stats(),
+            return {"requests": self.requests, "errors": self.errors,
+                    "connections": self.connections,
+                    "protocol_version": PROTOCOL_VERSION}
+
+    def _stats(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        return {"server": self._server_stats(),
+                "batcher": self.batcher.stats(),
                 "service": self.service.stats()}
+
+    def _metrics(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Full registry snapshot (counters, gauges, histograms, plus
+        every collected ``stats()`` view) — the scrape endpoint.
+
+        ``format: "prometheus"`` returns the text exposition instead;
+        ``dumps: true`` appends the flight recorder's fault dumps.
+        """
+        fmt = params.get("format", "json")
+        if fmt not in ("json", "prometheus"):
+            raise RPCError(E_BAD_REQUEST,
+                           f"unknown metrics format {fmt!r} "
+                           f"(known: json, prometheus)", retryable=False)
+        snap = self.obs.registry.snapshot()
+        if fmt == "prometheus":
+            out: Dict[str, Any] = {"text": to_prometheus(snap)}
+        else:
+            out = {"snapshot": snap}
+        if params.get("dumps"):
+            out["dumps"] = list(self.obs.recorder.dumps)
+        return out
 
     def _health(self, params: Dict[str, Any]) -> Dict[str, Any]:
         """Degradation state for load balancers / chaos suites: the
@@ -238,7 +326,7 @@ class LatencyRPCServer:
         status = {"accept": "ok", "cache_only": "degraded",
                   "reject": "overloaded"}.get(tier, "degraded")
         hub = getattr(self.service, "hub", None)
-        return {
+        out = {
             "status": status,
             "shed_tier": tier,
             "queued": self.batcher.queued(),
@@ -247,6 +335,18 @@ class LatencyRPCServer:
             "bank_epochs": hub.epochs() if hasattr(hub, "epochs") else {},
             "protocol_version": PROTOCOL_VERSION,
         }
+        if self._obs_explicit:
+            # Compact live summary for dashboards — only with an
+            # explicit obs bundle, so the pre-obs health shape (and its
+            # golden bytes) stays untouched by default.
+            q = self.batcher.flush_latency_quantiles()
+            out["metrics"] = {
+                "queued": self.batcher.queued(),
+                "flush_p50_s": q["p50"],
+                "flush_p99_s": q["p99"],
+                "drift_score": self.obs.drift.score(),
+            }
+        return out
 
     def _rollover(self, params: Dict[str, Any]) -> Dict[str, Any]:
         """Zero-downtime bank swap: install a wire-shipped bank under

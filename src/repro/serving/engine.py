@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import Observability
 from repro.utils.logging import get_logger
 
 log = get_logger("repro.serving")
@@ -48,7 +49,8 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 512, greedy: bool = True, extras=None,
-                 latency_service=None, step_graph=None, latency_setting=None):
+                 latency_service=None, step_graph=None, latency_setting=None,
+                 obs: Optional[Observability] = None):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -60,8 +62,6 @@ class ServeEngine:
         self.queue: List[Request] = []
         self._step = jax.jit(model.decode_step)
         self._uid = 0
-        self._steps = 0
-        self._step_time_s = 0.0
         # Optional latency prediction: an OpGraph of one decode step plus
         # a trained LatencyService (or an RPC client fronting one) give
         # an a-priori per-step estimate.
@@ -71,8 +71,26 @@ class ServeEngine:
         self._latency_service = latency_service
         self._step_graph = step_graph
         self._latency_setting = latency_setting
+        # Every measured decode step feeds the drift monitor with its
+        # observed-vs-predicted residual (the closed-loop retraining
+        # signal of ROADMAP item 2); counters/histograms live in the
+        # same registry the RPC `metrics` endpoint serves when a shared
+        # bundle is passed in.
+        self.obs = obs or Observability.quiet()
+        self._eid = self.obs.instance("engine")
+        self.obs.registry.counter("serve_steps_total")
+        self.obs.registry.histogram("serve_step_duration")
         if latency_service is not None and step_graph is not None:
             self.refresh_step_estimate()
+
+    def _drift_key(self) -> str:
+        if self._latency_setting is not None:
+            try:
+                from repro.pipeline.store import setting_key
+                return setting_key(self._latency_setting)
+            except Exception:          # pragma: no cover - defensive
+                pass
+        return "serve"
 
     def refresh_step_estimate(self) -> Optional[float]:
         """(Re)fetch the decode-step latency prediction.
@@ -118,12 +136,22 @@ class ServeEngine:
             return None
         return self.predicted_step_s * (max(prompt_len - 1, 0) + max_new_tokens)
 
+    @property
+    def _steps(self) -> int:
+        return int(self.obs.registry.get("serve_steps_total",
+                                         engine=self._eid))
+
     def stats(self) -> Dict[str, Any]:
-        measured = self._step_time_s / self._steps if self._steps else None
+        # Step counters live in the obs registry (the `metrics` endpoint
+        # and this dict read the same numbers); this stays a view.
+        h = self.obs.registry.hist_stats("serve_step_duration",
+                                         engine=self._eid)
+        steps = self._steps
+        measured = h["sum"] / steps if steps else None
         ratio = (measured / self.predicted_step_s
                  if measured and self.predicted_step_s else None)
         return {
-            "steps": self._steps,
+            "steps": steps,
             "measured_step_s": measured,
             "predicted_step_s": self.predicted_step_s,
             "measured_over_predicted": ratio,
@@ -176,8 +204,13 @@ class ServeEngine:
         t0 = time.perf_counter()
         logits, self.cache = self._step(self.params, self._batch_all(), self.cache)
         logits = np.asarray(logits)
-        self._steps += 1
-        self._step_time_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.obs.registry.inc("serve_steps_total", engine=self._eid)
+        self.obs.registry.observe("serve_step_duration", dt,
+                                  engine=self._eid)
+        if self.predicted_step_s:
+            self.obs.drift.observe(self._drift_key(), "decode_step",
+                                   self.predicted_step_s, dt)
         finished = 0
         for slot, req in enumerate(self.active):
             if req is None:

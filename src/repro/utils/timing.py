@@ -29,9 +29,13 @@ def time_callable(
     inner: int = 4,
     repeats: int = 3,
 ) -> float:
-    """Return estimated seconds per call of ``fn(*args)`` (min over repeats)."""
+    """Return estimated seconds per call of ``fn(*args)`` (min over repeats).
+
+    ``warmup=0`` is honored — no warm-up iterations run, so the first
+    timed repeat pays compilation (deliberate for cold-start studies).
+    """
     out = None
-    for _ in range(max(1, warmup)):
+    for _ in range(warmup):
         out = fn(*args)
     _block(out)
     best = float("inf")
@@ -63,7 +67,8 @@ def time_sequential(
             out = fn(*args)
         return out
 
-    for _ in range(max(1, warmup)):
+    out = None
+    for _ in range(warmup):
         out = run_once()
     _block(out)
     best = float("inf")
