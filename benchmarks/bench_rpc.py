@@ -39,7 +39,8 @@ import numpy as np
 from repro.core.dataset import synthetic_graphs
 from repro.core.nas_space import NASSpaceConfig, sample_architecture
 from repro.core.profiler import DeviceSetting
-from repro.obs import Observability
+from repro.obs import (AlertEngine, AlertRule, MetricsTimeline,
+                       Observability)
 from repro.pipeline import LatencyService, PredictorHub, ProfileStore
 from repro.rpc.batcher import BatchPolicy, MicroBatcher, MonotonicClock
 from repro.rpc.chaos import FaultPlan, FaultSpec
@@ -273,6 +274,62 @@ def run(smoke: bool = False) -> None:
     assert overhead < 0.05, \
         f"metrics+tracing must cost <5% throughput, got {overhead:.1%}"
 
+    # -- control-plane overhead: timeline sampling + alert evaluation --------
+    # The closed-loop control plane (a MetricsTimeline polling registry
+    # probes + an AlertEngine evaluating SLO/drift rules, exactly what
+    # the recalibration autopilot's poll thread runs) samples at ~200 Hz
+    # on a background thread while the batched workload runs — 10x the
+    # autopilot's default 20 Hz cadence.  Its cost on the hot path must
+    # stay under 5%.
+    timeline = MetricsTimeline(interval=5e-3, capacity=4096)
+    timeline.track_counter(traced_obs.registry, "rpc_batcher_submitted_total")
+    timeline.track_quantile(traced_obs.registry, "rpc_batcher_flush_duration",
+                            0.99, name="flush_p99_s")
+    timeline.track("drift_score", traced_obs.drift.score)
+    alert_engine = AlertEngine(timeline, [
+        AlertRule("flush_slo_burn", series="flush_p99_s", threshold=0.25,
+                  sustain=3),
+        AlertRule("drift", series="drift_score", threshold=1.0, sustain=3),
+    ], obs=traced_obs)
+    ctl_stop = threading.Event()
+
+    def control_loop():
+        while not ctl_stop.is_set():
+            timeline.sample()
+            alert_engine.evaluate()
+            ctl_stop.wait(2e-3)
+
+    ctl_trials = []
+    for _ in range(reps):
+        wall_q, _, _, _ = drive(traced_svc, graphs, obs_policy,
+                                obs=traced_obs)
+        ctl_stop.clear()
+        ctl = threading.Thread(target=control_loop, daemon=True)
+        ctl.start()
+        wall_ctl, _, _, _ = drive(traced_svc, graphs, obs_policy,
+                                  obs=traced_obs)
+        ctl_stop.set()
+        ctl.join()
+        ctl_trials.append((wall_ctl / wall_q, wall_q, wall_ctl))
+    ctl_trials.sort(key=lambda t: t[0])
+    ctl_ratio, wall_q, wall_ctl = ctl_trials[len(ctl_trials) // 2]
+    ctl_overhead = ctl_ratio - 1.0
+    timeline_alert = {
+        "no_control_req_per_s": round(n_requests / wall_q, 1),
+        "control_req_per_s": round(n_requests / wall_ctl, 1),
+        "overhead_frac": round(ctl_overhead, 4),
+        "timeline_samples": timeline.samples,
+        "rules": len(alert_engine.rules()),
+        "alerts_fired": len(alert_engine.audit.events("alert.fire")),
+    }
+    print(f"# timeline+alert overhead: {ctl_overhead:+.1%} throughput "
+          f"({timeline.samples} samples, "
+          f"{timeline_alert['alerts_fired']} fires)")
+    assert ctl_overhead < 0.05, \
+        f"control plane must cost <5% throughput, got {ctl_overhead:.1%}"
+    assert timeline.samples > 0 and \
+        alert_engine.stats()["consumed"] == timeline.samples
+
     # -- degraded mode: 10% of flushes fail, clients retry -------------------
     # Same batched policy, same graphs; a seeded FaultPlan fails 10% of
     # flushes with a retryable E_UNAVAILABLE and every client resubmits
@@ -362,6 +419,7 @@ def run(smoke: bool = False) -> None:
         "max_abs_delta_vs_numpy_s": float(np.max(deltas)),
         "degraded_mode": degraded,
         "instrumentation_overhead": instrumentation,
+        "timeline_alert_overhead": timeline_alert,
     })
     if not smoke:
         assert runs.get("jax", 0) > 0, \

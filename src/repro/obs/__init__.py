@@ -22,10 +22,13 @@ from __future__ import annotations
 
 from typing import Any, Dict, Optional
 
+from repro.obs.alerts import AlertEngine, AlertRule, AuditLog
+from repro.obs.autopilot import AutopilotConfig, RecalibrationAutopilot
 from repro.obs.drift import DriftMonitor, Welford, attach_session_drift
-from repro.obs.export import snapshot_to_json, to_prometheus
+from repro.obs.export import METRIC_HELP, snapshot_to_json, to_prometheus
 from repro.obs.metrics import (DEFAULT_SIZE_BUCKETS, DEFAULT_TIME_BUCKETS,
                                MetricsRegistry, log_buckets)
+from repro.obs.timeline import MetricsTimeline
 from repro.obs.tracing import (FlightRecorder, Span, Tracer, validate_dump,
                                NOOP_SPAN)
 
@@ -33,7 +36,9 @@ __all__ = [
     "Observability", "MetricsRegistry", "Tracer", "Span", "FlightRecorder",
     "DriftMonitor", "Welford", "attach_session_drift", "log_buckets",
     "DEFAULT_TIME_BUCKETS", "DEFAULT_SIZE_BUCKETS", "to_prometheus",
-    "snapshot_to_json", "validate_dump", "NOOP_SPAN",
+    "snapshot_to_json", "validate_dump", "NOOP_SPAN", "MetricsTimeline",
+    "AlertRule", "AlertEngine", "AuditLog", "METRIC_HELP",
+    "AutopilotConfig", "RecalibrationAutopilot",
 ]
 
 

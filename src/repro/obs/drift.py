@@ -139,6 +139,22 @@ class DriftMonitor:
         out.sort(key=lambda t: (-t[2], t[0], t[1]))
         return out
 
+    def worst_cells(self, k: int = 5) -> List[Dict[str, Any]]:
+        """Top-``k`` offending cells, worst first, regardless of whether
+        they crossed 1.0 — the autopilot's targeting list and the
+        `health` endpoint's "top offender" summary.  Each entry:
+        ``{setting, op_type, n, mean, score}``."""
+        out: List[Dict[str, Any]] = []
+        with self._lock:
+            for (sk, ot), c in self._cells.items():
+                if c.n < self.min_count:
+                    continue
+                out.append({"setting": sk, "op_type": ot, "n": c.n,
+                            "mean": c.mean,
+                            "score": abs(c.mean) / self.threshold})
+        out.sort(key=lambda d: (-d["score"], d["setting"], d["op_type"]))
+        return out[:max(int(k), 0)]
+
     def snapshot(self) -> Dict[str, Any]:
         """Bit-stable JSON view (cells keyed ``"<setting>|<op_type>"``)."""
         with self._lock:

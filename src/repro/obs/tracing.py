@@ -240,6 +240,7 @@ class FlightRecorder:
         self._lock = threading.Lock()
         self._ring: deque = deque(maxlen=int(capacity))
         self.dumps: deque = deque(maxlen=int(max_dumps))
+        self.dumps_dropped = 0         # evicted past max_dumps (silent loss)
 
     def record(self, span_json: Dict[str, Any]) -> None:
         with self._lock:
@@ -256,6 +257,9 @@ class FlightRecorder:
         with self._lock:
             d = {"reason": str(reason), "attrs": dict(attrs or {}),
                  "spans": list(self._ring)}
+            if (self.dumps.maxlen is not None
+                    and len(self.dumps) == self.dumps.maxlen):
+                self.dumps_dropped += 1
             self.dumps.append(d)
         return d
 
@@ -266,6 +270,7 @@ class FlightRecorder:
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             return {"ring_spans": len(self._ring), "dumps": len(self.dumps),
+                    "dumps_dropped": self.dumps_dropped,
                     "last_reason": (self.dumps[-1]["reason"]
                                     if self.dumps else None)}
 

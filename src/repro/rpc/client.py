@@ -385,15 +385,26 @@ class LatencyClient:
         return self.call("health")
 
     def metrics(self, *, format: Optional[str] = None,
-                dumps: bool = False) -> Dict[str, Any]:
+                dumps: bool = False, timeline: bool = False,
+                audit: bool = False,
+                audit_kind: Optional[str] = None) -> Dict[str, Any]:
         """The server's full observability snapshot (``format="prometheus"``
         for text exposition; ``dumps=True`` includes flight-recorder
-        fault dumps)."""
+        fault dumps; ``timeline=True``/``audit=True`` add the metrics
+        timeline ring and control-plane audit log of a server-side
+        autopilot, ``audit_kind`` filtering to one event kind)."""
         params: Dict[str, Any] = {}
         if format is not None:
             params["format"] = format
         if dumps:
             params["dumps"] = True
+        if timeline:
+            params["timeline"] = True
+        if audit:
+            params["audit"] = True
+        if audit_kind is not None:
+            params["audit"] = True
+            params["audit_kind"] = audit_kind
         return self.call("metrics", params)
 
     def rollover(self, setting: Any, bank: Any,

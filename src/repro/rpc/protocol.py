@@ -26,8 +26,12 @@ Methods (params → result):
     search_front   {setting?, budget_s?, limit?} → {setting, total, members}
     health         {} → {status, shed_tier, queued, queue_capacity,
                          hub_epoch, bank_epochs}
+                         (+ metrics summary with an explicit obs bundle,
+                          + autopilot status with an autopilot attached)
     rollover       {setting, family?, bank} → {setting, family, epoch}
-    metrics        {format?, dumps?} → {snapshot} | {text}
+    metrics        {format?, dumps?, timeline?, audit?, audit_kind?}
+                   → {snapshot} | {text} (+ dumps/timeline/audit keys;
+                     timeline/audit need a server-side autopilot)
 
 Either envelope may carry an optional ``trace`` field —
 ``{"tid": <trace id>, "sid": <span id>}`` — propagating a request's

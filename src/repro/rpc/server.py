@@ -89,6 +89,7 @@ class LatencyRPCServer:
                  search_report: Any = None,
                  chaos: Optional[Any] = None,
                  obs: Optional[Observability] = None,
+                 autopilot: Optional[Any] = None,
                  host: str = "127.0.0.1", port: int = 0):
         self.service = service
         # Optional `repro.rpc.chaos.FaultPlan`: consulted per dispatch
@@ -104,6 +105,10 @@ class LatencyRPCServer:
         # golden bytes intact).
         self._obs_explicit = obs is not None
         self.obs = obs or Observability.quiet()
+        # Optional `repro.obs.autopilot.RecalibrationAutopilot`: its
+        # status rides the `health` response, and the `metrics` RPC
+        # serves its timeline + audit log on request.
+        self.autopilot = autopilot
         self.batcher = batcher or MicroBatcher(
             service, policy, clock=clock, auto_start=auto_start_batcher,
             chaos=chaos, obs=self.obs)
@@ -144,6 +149,10 @@ class LatencyRPCServer:
             reg.collect("tree_gather", residency_counters)
         except Exception:                             # pragma: no cover
             pass
+        if self.autopilot is not None:
+            reg.collect("autopilot", self.autopilot.status)
+            reg.collect("alerts", self.autopilot.engine.stats)
+            reg.collect("timeline", self.autopilot.engine.timeline.stats)
         reg.collect("server", self._server_stats)
 
     # -- search-front endpoint ------------------------------------------------
@@ -302,8 +311,12 @@ class LatencyRPCServer:
         """Full registry snapshot (counters, gauges, histograms, plus
         every collected ``stats()`` view) — the scrape endpoint.
 
-        ``format: "prometheus"`` returns the text exposition instead;
-        ``dumps: true`` appends the flight recorder's fault dumps.
+        ``format: "prometheus"`` returns the text exposition instead
+        (stamped with a ``repro_scrape_timestamp_seconds`` gauge from
+        the server's injectable clock); ``dumps: true`` appends the
+        flight recorder's fault dumps; with an autopilot attached,
+        ``timeline: true`` adds the metrics timeline ring and
+        ``audit: true`` the control-plane audit log.
         """
         fmt = params.get("format", "json")
         if fmt not in ("json", "prometheus"):
@@ -312,11 +325,22 @@ class LatencyRPCServer:
                            f"(known: json, prometheus)", retryable=False)
         snap = self.obs.registry.snapshot()
         if fmt == "prometheus":
-            out: Dict[str, Any] = {"text": to_prometheus(snap)}
+            out: Dict[str, Any] = {"text": to_prometheus(snap,
+                                                         now=self.obs.now())}
         else:
             out = {"snapshot": snap}
         if params.get("dumps"):
             out["dumps"] = list(self.obs.recorder.dumps)
+        if params.get("timeline") or params.get("audit"):
+            if self.autopilot is None:
+                raise RPCError(E_UNAVAILABLE,
+                               "no autopilot attached — timeline/audit "
+                               "queries need one", retryable=False)
+            if params.get("timeline"):
+                out["timeline"] = self.autopilot.engine.timeline.to_json()
+            if params.get("audit"):
+                out["audit"] = self.autopilot.audit.events(
+                    params.get("audit_kind"))
         return out
 
     def _health(self, params: Dict[str, Any]) -> Dict[str, Any]:
@@ -340,12 +364,16 @@ class LatencyRPCServer:
             # explicit obs bundle, so the pre-obs health shape (and its
             # golden bytes) stays untouched by default.
             q = self.batcher.flush_latency_quantiles()
+            worst = self.obs.drift.worst_cells(1)
             out["metrics"] = {
                 "queued": self.batcher.queued(),
                 "flush_p50_s": q["p50"],
                 "flush_p99_s": q["p99"],
                 "drift_score": self.obs.drift.score(),
+                "drift_top": worst[0] if worst else None,
             }
+        if self.autopilot is not None:
+            out["autopilot"] = self.autopilot.status()
         return out
 
     def _rollover(self, params: Dict[str, Any]) -> Dict[str, Any]:

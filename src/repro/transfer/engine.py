@@ -62,6 +62,7 @@ class TransferResult:
     map_kinds: Dict[str, str] = field(default_factory=dict)
     default_map_kind: str = ""
     composition: str = ""          # "probes:N" | "ratio-scaled" | "source"
+    focus_op_types: List[str] = field(default_factory=list)
 
     @property
     def n_measurements(self) -> int:
@@ -77,6 +78,7 @@ class TransferResult:
             "map_kinds": dict(sorted(self.map_kinds.items())),
             "default_map_kind": self.default_map_kind,
             "composition": self.composition,
+            "focus_op_types": list(self.focus_op_types),
         }
 
 
@@ -95,6 +97,8 @@ class TransferEngine:
         source_descriptor: Optional[DeviceDescriptor] = None,
         target_descriptor: Optional[DeviceDescriptor] = None,
         probe_graphs: Optional[Sequence[OpGraph]] = None,
+        focus_op_types: Optional[Sequence[str]] = None,
+        focus_frac: float = 0.5,
     ):
         if setting_key(source_setting) == setting_key(target_setting):
             raise ValueError(
@@ -110,6 +114,15 @@ class TransferEngine:
         self.source_descriptor = source_descriptor
         self.target_descriptor = target_descriptor
         self.probe_graphs = list(probe_graphs) if probe_graphs else None
+        # Concentration: ``focus_frac`` of the op budget is planned over
+        # ``focus_op_types`` alone (the drift monitor's offending cells)
+        # before the general coverage pass fills the rest — few-shot
+        # recalibration spent where the predictor is known to be wrong.
+        self.focus_op_types = (sorted({str(t) for t in focus_op_types})
+                               if focus_op_types else [])
+        if not 0.0 < focus_frac <= 1.0:
+            raise ValueError("focus_frac must be in (0, 1]")
+        self.focus_frac = float(focus_frac)
         self._sig_index: Optional[Dict[str, Tuple[OpGraph, Any]]] = None
 
     # -- target measurement ---------------------------------------------------
@@ -154,6 +167,47 @@ class TransferEngine:
             total += float(np.sum(preds))
         return total
 
+    # -- budgeted op planning -------------------------------------------------
+    def _plan_ops(self, source_store: ProfileStore,
+                  source_bank: PredictorBank, n_ops: int) -> SamplePlan:
+        """The op-measurement plan: one general coverage-first pass —
+        unless ``focus_op_types`` concentrates ``focus_frac`` of the
+        budget on the offending types first, with the general pass
+        filling the remainder (signature-deduped, same determinism)."""
+        all_types = set(source_bank.predictors)
+        focus = [t for t in self.focus_op_types if t in all_types]
+        if not focus or n_ops <= 1:
+            return plan_samples(source_store, self.source_setting, n_ops,
+                                bank=source_bank, op_types=all_types,
+                                strata=self.strata, seed=self.seed)
+        n_focus = min(n_ops, max(1, int(round(self.focus_frac * n_ops))))
+        plan_f = plan_samples(source_store, self.source_setting, n_focus,
+                              bank=source_bank, op_types=set(focus),
+                              strata=self.strata, seed=self.seed)
+        plan_g = plan_samples(source_store, self.source_setting, n_ops,
+                              bank=source_bank, op_types=all_types,
+                              strata=self.strata, seed=self.seed)
+        merged = SamplePlan(budget=n_ops, seed=self.seed)
+        seen = set()
+        n_cov = 0
+        for src, i, rec in (
+                [("f", i, r) for i, r in enumerate(plan_f.records)]
+                + [("g", i, r) for i, r in enumerate(plan_g.records)]):
+            if len(merged.records) >= n_ops:
+                break
+            if rec.signature in seen:
+                continue
+            seen.add(rec.signature)
+            merged.records.append(rec)
+            cov_n = plan_f.n_coverage if src == "f" else plan_g.n_coverage
+            if i < cov_n:
+                n_cov += 1
+        merged.n_coverage = n_cov
+        merged.n_greedy = len(merged.records) - n_cov
+        for r in merged.records:
+            merged.per_type[r.op_type] = merged.per_type.get(r.op_type, 0) + 1
+        return merged
+
     # -- the adapt flow -------------------------------------------------------
     def adapt(
         self,
@@ -186,10 +240,7 @@ class TransferEngine:
                         len(archs), budget_k - 1)
             n_e2e = max(n_e2e, 0)
 
-        plan = plan_samples(source_store, self.source_setting,
-                            budget_k - n_e2e, bank=source_bank,
-                            op_types=set(source_bank.predictors),
-                            strata=self.strata, seed=self.seed)
+        plan = self._plan_ops(source_store, source_bank, budget_k - n_e2e)
 
         # Measure the sampled ops on the target.
         pairs_by_type: Dict[str, List[Tuple[float, float]]] = {}
@@ -288,7 +339,8 @@ class TransferEngine:
             bank=bank, target_key=tkey, family=self.family, budget=budget_k,
             n_op_measurements=n_op, n_e2e_measurements=n_graph, plan=plan,
             map_kinds={t: m.kind for t, m in maps.items()},
-            default_map_kind=default_map.kind, composition=composition)
+            default_map_kind=default_map.kind, composition=composition,
+            focus_op_types=list(self.focus_op_types))
         log.info("adapted %s → %s with %d/%d measurements "
                  "(%d op, %d e2e; composition=%s)",
                  setting_key(self.source_setting), tkey,

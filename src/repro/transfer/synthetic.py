@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import hashlib
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional
 
 from repro.core.fusion import fuse_graph
@@ -73,6 +73,25 @@ class SyntheticDevice:
     def e2e(self, op_sum_s: float, num_kernels: int) -> float:
         return (self.op_sum_scale * op_sum_s
                 + self.dispatch_s * num_kernels + self.base_overhead_s)
+
+    def warp_shift(self, *, scale: float = 1.0,
+                   seed_offset: int = 0) -> "SyntheticDevice":
+        """Seeded calibration drift: the same device after its latency
+        characteristics moved.
+
+        ``scale`` multiplies every op's latency uniformly (a thermal
+        throttle / DVFS shift — systematic bias the drift monitor's
+        log-ratio mean sees directly); ``seed_offset`` re-rolls the
+        per-type warp parameters (a driver/firmware change — some op
+        types drift much more than others, which is what makes
+        `DriftMonitor.worst_cells` targeting meaningful).  Deterministic
+        by construction: the drifted device is as replayable as the
+        original.
+        """
+        if scale <= 0:
+            raise ValueError("scale must be > 0")
+        return replace(self, seed=self.seed + int(seed_offset),
+                       base_scale=self.base_scale * float(scale))
 
 
 class CostModelProfileSession(ProfileSession):

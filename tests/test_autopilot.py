@@ -1,0 +1,742 @@
+"""Closed-loop observability: timeline, alert engine, autopilot.
+
+Covers the three `repro.obs` control-plane pieces added for ROADMAP
+item 2 — `MetricsTimeline`, `AlertEngine`/`AlertRule`/`AuditLog`,
+`RecalibrationAutopilot` — plus the satellites that ride along
+(`DriftMonitor.worst_cells`, `FlightRecorder.dumps_dropped`,
+focus-aware transfer planning, `SyntheticDevice.warp_shift`).
+
+The centerpiece is the deterministic closed loop: a seeded synthetic
+drift (warp shift) pushes the drift score over threshold, the rule
+sustains and fires, the autopilot recalibrates the offending op types
+with a bounded budget and rolls the refreshed bank over — and the whole
+sequence is reconstructable from the audit log + span tree alone,
+bit-identical across two `ManualClock` replays.  A second test runs the
+same loop while a TCP flood is in flight and checks no request is lost
+or double-answered across the rollover.
+"""
+import json
+import threading
+from collections import Counter
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+from repro.core.dataset import synthetic_graphs
+from repro.core.profiler import DeviceSetting
+from repro.obs import (AlertEngine, AlertRule, AuditLog, AutopilotConfig,
+                       DriftMonitor, FlightRecorder, MetricsRegistry,
+                       MetricsTimeline, Observability, RecalibrationAutopilot,
+                       attach_session_drift, to_prometheus)
+from repro.pipeline import LatencyService, PredictorHub, ProfileStore
+from repro.pipeline.store import setting_key
+from repro.rpc.batcher import BatchPolicy, ManualClock
+from repro.rpc.client import LatencyClient
+from repro.rpc.protocol import RPCError
+from repro.rpc.server import LatencyRPCServer
+from repro.transfer import (CostModelProfileSession, ReplayProfileSession,
+                            SyntheticDevice, TransferEngine)
+
+SRC = DeviceSetting("cpu_f32", "float32", "op_by_op")
+TGT = DeviceSetting("edge_f32", "float32", "op_by_op", device="edge0")
+DEVICE = SyntheticDevice("edge0", seed=7, noise=0.05, curvature=0.1)
+TGT_KEY = "edge0:float32/op_by_op"
+
+
+def build_fleet(n_graphs=12, seed=1):
+    """Source store + hub with a source gbdt bank and a calibrated
+    target bank onboarded against the *pre-drift* device."""
+    graphs = synthetic_graphs(n_graphs, resolution=16)
+    store = ProfileStore()
+    sess = CostModelProfileSession(store=store, seed=seed)
+    for g in graphs:
+        sess.profile_graph(g, SRC)
+    hub = PredictorHub()
+    hub.train(store, SRC, "gbdt", hparams={"n_stages": 30}, min_samples=3)
+    TransferEngine(SRC, TGT, family="gbdt", seed=0).adapt(
+        store, hub, ReplayProfileSession(store, DEVICE, SRC), 32)
+    return store, graphs, hub
+
+
+def observe_round(store, svc, obs, device, n=48):
+    """One profiling round against the (possibly drifted) device: fresh
+    session each time — a reused session's latency cache would replay
+    the pre-drift values and hide the drift."""
+    sess = ReplayProfileSession(store, device, SRC)
+    attach_session_drift(sess, svc, obs.drift)
+    for rec in store.op_records(SRC)[:n]:
+        sess.measure_record(rec, TGT)
+
+
+# ---------------------------------------------------------------------------
+# MetricsTimeline
+# ---------------------------------------------------------------------------
+
+class TestTimeline:
+    def test_interval_gating_and_force(self):
+        clock = ManualClock()
+        tl = MetricsTimeline(clock=clock, interval=2, capacity=16)
+        val = {"x": 1.0}
+        tl.track("x", lambda: val["x"])
+        assert tl.sample() is not None           # first sample always lands
+        assert tl.sample() is None               # same instant: gated
+        assert tl.stats()["skipped"] == 1
+        clock.advance(1)
+        assert tl.sample() is None               # under the interval
+        assert tl.sample(force=True) is not None  # force bypasses the gate
+        clock.advance(2)
+        val["x"] = 5.0
+        p = tl.sample()
+        assert p["v"]["x"] == 5
+        assert tl.latest("x") == 5
+        assert tl.samples == 3
+
+    def test_capacity_bounds_ring_and_points_since(self):
+        clock = ManualClock()
+        tl = MetricsTimeline(clock=clock, interval=1, capacity=4)
+        tl.track("x", lambda: clock.now())
+        for _ in range(10):
+            clock.advance(1)
+            tl.sample()
+        assert len(tl.points()) == 4             # ring evicted the rest
+        assert tl.samples == 10
+        fresh, total = tl.points_since(8)        # only the still-held tail
+        assert total == 10
+        assert [p["t"] for p in fresh] == [9, 10]
+        fresh, total = tl.points_since(2)        # older points were evicted
+        assert [p["t"] for p in fresh] == [7, 8, 9, 10]
+
+    def test_probe_error_omits_value_and_counts(self):
+        tl = MetricsTimeline(clock=ManualClock(), interval=1)
+        tl.track("good", lambda: 1.0)
+
+        def bad():
+            raise RuntimeError("probe down")
+        tl.track("bad", bad)
+        p = tl.sample()
+        assert p["v"] == {"good": 1}             # bad omitted, not poisoned
+        assert tl.stats()["probe_errors"] == 1
+
+    def test_windows_alignment_and_conservation(self):
+        clock = ManualClock()
+        tl = MetricsTimeline(clock=clock, interval=1, capacity=64)
+        seq = iter([3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0])
+        tl.track("x", lambda: next(seq))
+        for _ in range(7):
+            clock.advance(1)
+            tl.sample()                          # t = 1..7, width 3 windows
+        ws = tl.windows("x", 3.0)
+        assert [w["start"] for w in ws] == [0, 3, 6]
+        assert [w["end"] for w in ws] == [3, 6, 9]
+        assert sum(w["count"] for w in ws) == 7  # conservation
+        w0 = ws[0]                               # t=1,2 -> values 3,1
+        assert (w0["min"], w0["max"], w0["last"]) == (1, 3, 1)
+        assert ws[-1]["last"] == 2               # t=7 -> 2
+
+    def test_json_round_trip_bit_stable(self):
+        clock = ManualClock()
+        tl = MetricsTimeline(clock=clock, interval=1, capacity=8)
+        tl.track("x", lambda: 0.5 * clock.now())
+        for _ in range(5):
+            clock.advance(1)
+            tl.sample()
+        text = tl.json_text()
+        back = MetricsTimeline.from_json(json.loads(text), clock=clock)
+        assert back.json_text() == text          # byte-stable round trip
+        assert back.series("x") == tl.series("x")
+
+    def test_track_registry_probes(self):
+        reg = MetricsRegistry()
+        reg.inc("reqs_total", 3, svc="a")
+        reg.set("depth", 7.0)
+        reg.histogram("lat", buckets=(0.1, 1.0))
+        reg.observe("lat", 0.5)
+        tl = MetricsTimeline(clock=ManualClock(), interval=1)
+        tl.track_counter(reg, "reqs_total", svc="a")
+        tl.track_gauge(reg, "depth")
+        tl.track_quantile(reg, "lat", 0.5)
+        p = tl.sample()
+        assert p["v"]["reqs_total"] == 3
+        assert p["v"]["depth"] == 7
+        assert "lat_p50" in p["v"]
+
+
+if HAS_HYPOTHESIS:
+    class TestTimelineProperties:
+        @settings(max_examples=50, deadline=None)
+        @given(deltas=st.lists(st.integers(min_value=0, max_value=5),
+                               min_size=1, max_size=40),
+               width=st.integers(min_value=1, max_value=7))
+        def test_window_conservation_and_monotone_edges(self, deltas, width):
+            clock = ManualClock()
+            tl = MetricsTimeline(clock=clock, interval=1, capacity=4096)
+            tl.track("x", lambda: float(clock.now() % 13))
+            for d in deltas:
+                clock.advance(d)
+                tl.sample()
+            ws = tl.windows("x", float(width))
+            # Conservation: every held point lands in exactly one window.
+            assert sum(w["count"] for w in ws) == len(tl.series("x"))
+            for w in ws:
+                assert w["end"] - w["start"] == width
+                assert w["start"] % width == 0   # absolute alignment
+                assert w["min"] <= w["last"] <= w["max"]
+                assert w["count"] >= 1           # empty windows are omitted
+            # Monotone, non-overlapping edges.
+            for a, b in zip(ws, ws[1:]):
+                assert a["end"] <= b["start"]
+
+
+# ---------------------------------------------------------------------------
+# AlertRule / AlertEngine / AuditLog
+# ---------------------------------------------------------------------------
+
+def run_rule(rule, samples):
+    """Drive one rule over a scripted [(t, value)] list; returns events."""
+    clock = ManualClock()
+    tl = MetricsTimeline(clock=clock, interval=0.5, capacity=4096)
+    cur = {"v": 0.0}
+    tl.track(rule.series, lambda: cur["v"])
+    eng = AlertEngine(tl, [rule])
+    out = []
+    for t, v in samples:
+        clock.advance(t - clock.now())
+        cur["v"] = v
+        tl.sample(force=True)
+        out.extend(eng.evaluate())
+    return out, eng
+
+
+class TestAlertRules:
+    def test_exactly_at_threshold_does_not_fire(self):
+        rule = AlertRule("r", series="s", threshold=1.0, sustain=1)
+        events, eng = run_rule(rule, [(1, 1.0), (2, 1.0), (3, 1.0)])
+        assert events == []
+        assert eng.firing() == []
+        events, _ = run_rule(AlertRule("r", series="s", threshold=1.0),
+                             [(1, 1.0000001)])
+        assert [e["kind"] for e in events] == ["fire"]
+
+    def test_sustain_counts_consecutive_breaches(self):
+        rule = AlertRule("r", series="s", threshold=1.0, sustain=3)
+        # Breach, breach, dip (streak resets), breach x3 -> fire on the 6th.
+        events, _ = run_rule(rule, [(1, 2), (2, 2), (3, 0.5),
+                                    (4, 2), (5, 2), (6, 2)])
+        assert [(e["kind"], e["t"]) for e in events] == [("fire", 6)]
+
+    def test_sustain_resets_on_gap(self):
+        rule = AlertRule("r", series="s", threshold=1.0, sustain=3,
+                         max_gap=2.0)
+        # Two breaches, then a 5s hole in the series: excursion over.
+        events, _ = run_rule(rule, [(1, 2), (2, 2), (7, 2), (8, 2)])
+        assert events == []
+        events, _ = run_rule(rule, [(1, 2), (2, 2), (7, 2), (8, 2), (9, 2)])
+        assert [e["kind"] for e in events] == ["fire"]
+
+    def test_hysteresis_holds_then_rearms(self):
+        rule = AlertRule("r", series="s", threshold=1.0, sustain=2,
+                         clear_threshold=0.5)
+        events, eng = run_rule(rule, [
+            (1, 2), (2, 2),          # fire at t=2
+            (3, 0.8),                # inside the band: still firing
+            (4, 0.5),                # at clear level: clears (not strict >)
+            (5, 2), (6, 2),          # re-armed: fires again
+        ])
+        assert [(e["kind"], e["t"]) for e in events] == \
+            [("fire", 2), ("clear", 4), ("fire", 6)]
+        assert eng.firing() == ["r"]
+
+    def test_clear_threshold_must_widen_band(self):
+        with pytest.raises(ValueError):
+            AlertRule("r", series="s", threshold=1.0, clear_threshold=2.0)
+        with pytest.raises(ValueError):
+            AlertRule("r", series="s", threshold=1.0, op="<",
+                      clear_threshold=0.5)
+
+    def test_delta_mode_alerts_on_rate(self):
+        rule = AlertRule("r", series="s", threshold=5.0, mode="delta")
+        # Counter-style series: only the +6 jump breaches.
+        events, _ = run_rule(rule, [(1, 0), (2, 2), (3, 4), (4, 10)])
+        assert [(e["kind"], e["value"]) for e in events] == [("fire", 6)]
+
+    def test_below_rule_and_duplicate_name_rejected(self):
+        rule = AlertRule("floor", series="s", threshold=1.0, op="<")
+        events, eng = run_rule(rule, [(1, 2.0), (2, 0.5)])
+        assert [e["kind"] for e in events] == ["fire"]
+        with pytest.raises(ValueError):
+            eng.add_rule(AlertRule("floor", series="s", threshold=9.0))
+
+    def test_events_are_trace_linked_and_audited(self):
+        clock = ManualClock()
+        obs = Observability(clock=clock, seed=5)
+        tl = MetricsTimeline(clock=clock, interval=1)
+        tl.track("s", lambda: 2.0)
+        eng = AlertEngine(tl, [AlertRule("r", series="s", threshold=1.0)],
+                          obs=obs)
+        clock.advance(1)
+        tl.sample()
+        (ev,) = eng.evaluate()
+        assert ev["tid"] is not None and ev["sid"] is not None
+        spans = obs.tracer.export()
+        assert any(s["name"] == "alert.fire" and s["sid"] == ev["sid"]
+                   for s in spans)
+        (audited,) = eng.audit.events("alert.fire")
+        assert audited["tid"] == ev["tid"]
+        # A fire also dumps the flight recorder.
+        assert obs.recorder.last_dump()["reason"] == "alert"
+
+
+if HAS_HYPOTHESIS:
+    class TestAlertProperties:
+        @settings(max_examples=60, deadline=None)
+        @given(values=st.lists(st.sampled_from([0.0, 0.5, 1.0, 1.5, 2.0]),
+                               min_size=1, max_size=30),
+               sustain=st.integers(min_value=1, max_value=4))
+        def test_fire_clear_alternate_and_sustain_holds(self, values,
+                                                        sustain):
+            rule = AlertRule("r", series="s", threshold=1.0, sustain=sustain,
+                             clear_threshold=0.5)
+            samples = [(i + 1, v) for i, v in enumerate(values)]
+            events, _ = run_rule(rule, samples)
+            kinds = [e["kind"] for e in events]
+            # fire/clear strictly alternate, starting with fire.
+            assert kinds == (["fire", "clear"] * len(kinds))[:len(kinds)]
+            for ev in events:
+                i = int(ev["t"]) - 1
+                if ev["kind"] == "fire":
+                    # The sustain points up to the fire all strictly breach.
+                    window = values[max(0, i - sustain + 1):i + 1]
+                    assert len(window) == sustain
+                    assert all(v > 1.0 for v in window)
+                else:
+                    assert values[i] <= 0.5
+            if all(v <= 1.0 for v in values):
+                assert events == []
+
+
+class TestAuditLog:
+    def test_bounded_with_monotone_seq_and_dropped(self):
+        log = AuditLog(capacity=4)
+        for i in range(7):
+            log.record("k", float(i), i=i)
+        evs = log.events()
+        assert len(evs) == 4
+        assert [e["seq"] for e in evs] == [4, 5, 6, 7]   # monotone, gapless
+        assert log.dropped == 3
+        assert log.stats() == {"events": 4, "seq": 7, "dropped": 3}
+        json.loads(log.json_text())                       # canonical JSON
+
+    def test_kind_filter_and_sorted_fields(self):
+        log = AuditLog()
+        log.record("a", 1.0, z=1, b=2)
+        log.record("b", 2.0)
+        assert [e["kind"] for e in log.events("a")] == ["a"]
+        assert list(log.events("a")[0]) == ["seq", "kind", "t", "b", "z"]
+
+
+# ---------------------------------------------------------------------------
+# Satellites: worst_cells, dumps_dropped, warp_shift, focus planning
+# ---------------------------------------------------------------------------
+
+class TestWorstCells:
+    def test_shape_order_and_gating(self):
+        m = DriftMonitor(threshold=0.25, min_count=2)
+        for _ in range(3):
+            m.observe("dev", "conv2d", 0.01, 0.02)       # |mean| = log 2
+            m.observe("dev", "dense", 0.01, 0.015)       # |mean| = log 1.5
+        m.observe("dev", "relu", 0.01, 0.09)             # n=1: gated out
+        cells = m.worst_cells(5)
+        assert [set(c) for c in cells] == \
+            [{"setting", "op_type", "n", "mean", "score"}] * 2
+        assert [c["op_type"] for c in cells] == ["conv2d", "dense"]
+        assert cells[0]["score"] > cells[1]["score"] > 1.0
+        assert m.worst_cells(1) == cells[:1]
+        assert m.worst_cells(0) == []
+
+    def test_ties_break_deterministically(self):
+        m = DriftMonitor(threshold=0.25, min_count=1)
+        m.observe("b", "z", 0.01, 0.02)
+        m.observe("a", "y", 0.01, 0.02)                  # identical score
+        assert [(c["setting"], c["op_type"]) for c in m.worst_cells(2)] == \
+            [("a", "y"), ("b", "z")]
+
+
+class TestFlightRecorderDrops:
+    def test_dump_overflow_counted(self):
+        fr = FlightRecorder(capacity=8, max_dumps=3)
+        for i in range(5):
+            fr.dump(f"r{i}")
+        assert len(fr.dumps) == 3
+        assert [d["reason"] for d in fr.dumps] == ["r2", "r3", "r4"]
+        assert fr.dumps_dropped == 2
+        assert fr.stats()["dumps_dropped"] == 2
+
+    def test_surfaced_through_obs_snapshot(self):
+        obs = Observability()
+        assert obs.snapshot()["collected"]["flight_recorder"][
+            "dumps_dropped"] == 0
+
+
+class TestPrometheusHelp:
+    def build(self):
+        reg = MetricsRegistry()
+        reg.inc("rpc_batcher_submitted_total", 5, batcher="batcher0")
+        reg.inc("obs_flight_dumps_total", 2, reason="alert")
+        reg.set("rpc_batcher_queue_depth", 3, batcher="batcher0")
+        reg.histogram("rpc_batcher_flush_duration",
+                      buckets=(0.001, 0.01, 0.1))
+        reg.observe("rpc_batcher_flush_duration", 0.005, batcher="batcher0")
+        reg.inc("custom_widget_total", 1)
+        return reg
+
+    def test_golden_bytes(self):
+        import os
+        golden = os.path.join(os.path.dirname(__file__), "golden",
+                              "metrics_prometheus.txt")
+        with open(golden) as f:
+            want = f.read()
+        text = to_prometheus(self.build().snapshot(include_collected=False),
+                             now=1234.5)
+        assert text == want                      # byte-pinned exposition
+
+    def test_help_lines_and_scrape_timestamp(self):
+        from repro.obs import METRIC_HELP
+        text = to_prometheus(self.build().snapshot(include_collected=False),
+                             now=1234.5)
+        # Curated description for every known metric...
+        assert ("# HELP rpc_batcher_submitted_total "
+                + METRIC_HELP["rpc_batcher_submitted_total"]) in text
+        # ...readable fallback (not an empty HELP) for unknown ones.
+        assert "# HELP custom_widget_total custom widget total." in text
+        assert "repro_scrape_timestamp_seconds 1234.5" in text
+        # Every exposed family carries a HELP line right before TYPE.
+        lines = text.splitlines()
+        for i, line in enumerate(lines):
+            if line.startswith("# TYPE"):
+                assert lines[i - 1].startswith(
+                    "# HELP " + line.split()[2] + " ")
+        # No timestamp gauge when no clock reading is supplied.
+        untimed = to_prometheus(self.build().snapshot(
+            include_collected=False))
+        assert "repro_scrape_timestamp_seconds" not in untimed
+
+    def test_help_map_matches_instrumented_names(self):
+        """Every curated HELP entry names a metric the codebase actually
+        emits — descriptions must not rot as metrics are renamed."""
+        import os
+        import re
+        from repro.obs import METRIC_HELP
+        root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+        literals = set()
+        for dirpath, _dirs, files in os.walk(root):
+            for fn in files:
+                if fn.endswith(".py"):
+                    with open(os.path.join(dirpath, fn)) as f:
+                        literals.update(
+                            re.findall(r'"([a-z0-9_]+)"', f.read()))
+        for name in METRIC_HELP:
+            if name == "repro_scrape_timestamp_seconds":
+                continue                         # synthesized at export
+            assert name in literals, f"METRIC_HELP orphan: {name}"
+
+
+class TestWarpShift:
+    def test_pure_scale_is_exact_multiplier(self):
+        warped = DEVICE.warp_shift(scale=2.0)
+        base = DEVICE.op_latency("conv2d", "sig0", 0.01)
+        assert warped.op_latency("conv2d", "sig0", 0.01) == \
+            pytest.approx(2.0 * base, rel=1e-12)
+        assert DEVICE.base_scale == warped.base_scale / 2.0  # original frozen
+
+    def test_seed_offset_rerolls_per_type_warp(self):
+        rerolled = DEVICE.warp_shift(seed_offset=11)
+        a = DEVICE.op_latency("conv2d", "sig0", 0.01)
+        b = rerolled.op_latency("conv2d", "sig0", 0.01)
+        assert a != b                                    # new device persona
+        # Deterministic: same shift twice is the same device.
+        again = DEVICE.warp_shift(seed_offset=11)
+        assert again.op_latency("conv2d", "sig0", 0.01) == b
+
+    def test_invalid_scale_rejected(self):
+        with pytest.raises(ValueError):
+            DEVICE.warp_shift(scale=0.0)
+
+
+class TestFocusPlanning:
+    @pytest.fixture(scope="class")
+    def source(self):
+        return build_fleet()
+
+    def test_focus_concentrates_budget(self, source):
+        store, _graphs, hub = source
+        bank = hub.get(SRC, "gbdt")
+        focus_type = Counter(r.op_type for r in
+                             store.op_records(SRC)).most_common(1)[0][0]
+        plain = TransferEngine(SRC, TGT, family="gbdt", seed=0)
+        focused = TransferEngine(SRC, TGT, family="gbdt", seed=0,
+                                 focus_op_types=[focus_type], focus_frac=0.5)
+        n = 16
+        p0 = plain._plan_ops(store, bank, n)
+        p1 = focused._plan_ops(store, bank, n)
+        count = lambda plan: sum(1 for r in plan.records
+                                 if r.op_type == focus_type)
+        assert count(p1) >= n // 2                       # focus share honored
+        assert count(p1) > count(p0)
+        assert len(p1.records) <= n
+        sigs = [r.signature for r in p1.records]
+        assert len(sigs) == len(set(sigs))               # merge deduped
+
+    def test_focus_validation_and_result_field(self, source):
+        store, _graphs, hub = source
+        with pytest.raises(ValueError):
+            TransferEngine(SRC, TGT, focus_op_types=["x"], focus_frac=0.0)
+        ft = store.op_types(SRC)[0]
+        eng = TransferEngine(SRC, TGT, family="gbdt", seed=0,
+                             focus_op_types=[ft])
+        scratch = PredictorHub()
+        scratch.register(SRC, "gbdt", hub.get(SRC, "gbdt"))
+        res = eng.adapt(store, scratch,
+                        ReplayProfileSession(store, DEVICE, SRC), 24)
+        assert res.focus_op_types == [ft]
+        assert res.to_json()["focus_op_types"] == [ft]
+        assert res.n_measurements <= 24
+
+
+# ---------------------------------------------------------------------------
+# The closed loop, deterministic and bit-replayable
+# ---------------------------------------------------------------------------
+
+class TestClosedLoop:
+    def run_once(self):
+        clock = ManualClock()
+        obs = Observability(clock=clock, seed=21, drift_threshold=0.5,
+                            drift_min_count=4)
+        store, graphs, hub = build_fleet()
+        svc = LatencyService(hub, default_setting=SRC, predictor="gbdt",
+                             obs=obs)
+        tl = MetricsTimeline(clock=clock, interval=1, capacity=256)
+        tl.track("drift_score", obs.drift.score)
+        eng = AlertEngine(tl, [AlertRule("drift", series="drift_score",
+                                         threshold=1.0, sustain=3)], obs=obs)
+        drifted = DEVICE.warp_shift(scale=2.4, seed_offset=3)
+        ap = RecalibrationAutopilot(
+            obs, eng, hub, store, SRC,
+            config=AutopilotConfig(budget_k=48, top_k_cells=3, cooldown=4.0,
+                                   window=64.0, max_actions_per_window=2,
+                                   seed=0))
+        ap.register_device(
+            TGT, lambda: ReplayProfileSession(store, drifted, SRC))
+        epoch0 = hub.epoch_of(TGT, "gbdt")
+        for _ in range(10):
+            observe_round(store, svc, obs, drifted)
+            clock.advance(1)
+            ap.step()
+        return {
+            "epoch0": epoch0, "epoch1": hub.epoch_of(TGT, "gbdt"),
+            "actions": [dict(a) for a in ap.actions],
+            "status": ap.status(),
+            "kinds": [e["kind"] for e in ap.audit.events()],
+            "audit": ap.audit.json_text(),
+            "spans": json.dumps(obs.tracer.export(), sort_keys=True),
+            "timeline": tl.json_text(),
+            "peak_score": max(v for _, v in tl.series("drift_score")),
+            "final_score": obs.drift.score(),
+            "hub": hub, "obs": obs, "ap": ap,
+        }
+
+    @pytest.fixture(scope="class")
+    def runs(self):
+        return self.run_once(), self.run_once()
+
+    def test_drift_fires_and_autopilot_rolls_over(self, runs):
+        a = runs[0]
+        assert a["epoch1"] > a["epoch0"]                 # bank rolled over
+        (act,) = a["actions"]                            # exactly one action
+        assert act["setting"] == TGT_KEY
+        assert 0 < act["n_measurements"] <= 64           # budget respected
+        assert act["focus_op_types"]                     # targeted, not blind
+        assert a["status"]["actions"] == 1
+        assert a["status"]["suppressed"] == 0
+
+    def test_drift_returns_below_threshold(self, runs):
+        a = runs[0]
+        assert a["peak_score"] > 1.0                     # drift was real
+        assert a["final_score"] < 1.0                    # recal fixed it
+        # Residual shrink: the post-rollover mean bias at the worst cell
+        # is far below the injected warp's log(2.4).
+        worst = a["obs"].drift.worst_cells(1)
+        assert worst and abs(worst[0]["mean"]) < 0.5
+
+    def test_sequence_reconstructable_from_audit(self, runs):
+        kinds = runs[0]["kinds"]
+        order = ["alert.fire", "autopilot.plan", "autopilot.recalibrate",
+                 "autopilot.rollover", "autopilot.drift_reset", "alert.clear"]
+        idx = [kinds.index(k) for k in order]            # each present once
+        assert idx == sorted(idx)
+        assert all(kinds.count(k) == 1 for k in order)
+        # The fire's trace id threads through to the autopilot span tree.
+        (fire,) = [e for e in runs[0]["ap"].audit.events("alert.fire")]
+        spans = json.loads(runs[0]["spans"])
+        action = next(s for s in spans if s["name"] == "autopilot.action")
+        assert action["tid"] == fire["tid"]
+        names = {s["name"] for s in spans
+                 if s["tid"] == fire["tid"]}
+        assert {"alert.fire", "autopilot.action", "autopilot.recalibrate",
+                "autopilot.rollover"} <= names
+
+    def test_bit_identical_replay(self, runs):
+        a, b = runs
+        assert a["audit"] == b["audit"]                  # byte-equal log
+        assert a["spans"] == b["spans"]                  # byte-equal spans
+        assert a["timeline"] == b["timeline"]            # byte-equal ring
+
+    def test_action_error_is_audited_not_raised(self):
+        """An action that blows up (here: no source bank) must be
+        swallowed, audited, and dumped — never thrown into whatever
+        thread was driving `step()`."""
+        clock = ManualClock()
+        obs = Observability(clock=clock, seed=2, drift_min_count=1)
+        hub = PredictorHub()
+        tl = MetricsTimeline(clock=clock, interval=1)
+        tl.track("drift_score", obs.drift.score)
+        eng = AlertEngine(tl, [AlertRule("drift", series="drift_score",
+                                         threshold=1.0, clear_threshold=0.1)],
+                          obs=obs)
+        store = ProfileStore()
+        ap = RecalibrationAutopilot(
+            obs, eng, hub, store, SRC,
+            config=AutopilotConfig(cooldown=100.0),
+            rollout=lambda *_a: 1)
+        calls = []
+        ap.register_device(TGT, lambda: calls.append(1))
+        obs.drift.observe(TGT_KEY, "conv2d", 0.01, 0.05)
+        clock.advance(1)
+        ap.step()                                        # fire #1 -> error
+        # (no source bank: the action errors, which must be audited and
+        # swallowed, never raised into the stepping thread)
+        assert ap.audit.events("autopilot.error")
+        assert not calls
+
+
+# ---------------------------------------------------------------------------
+# Mid-flood rollover over TCP: nothing lost, nothing double-answered
+# ---------------------------------------------------------------------------
+
+class TestMidFloodRollover:
+    THREADS, PER = 8, 6
+
+    def test_rollover_mid_flood_conserves_requests(self):
+        clock = ManualClock()
+        obs = Observability(clock=clock, seed=9, drift_threshold=0.5,
+                            drift_min_count=4)
+        store, graphs, hub = build_fleet()
+        svc = LatencyService(hub, default_setting=SRC, predictor="gbdt",
+                             obs=obs)
+        tl = MetricsTimeline(clock=clock, interval=1, capacity=256)
+        tl.track("drift_score", obs.drift.score)
+        eng = AlertEngine(tl, [AlertRule("drift", series="drift_score",
+                                         threshold=1.0, sustain=3)], obs=obs)
+        drifted = DEVICE.warp_shift(scale=2.4, seed_offset=3)
+        ap = RecalibrationAutopilot(
+            obs, eng, hub, store, SRC,
+            config=AutopilotConfig(budget_k=48, cooldown=4.0, seed=0))
+        ap.register_device(
+            TGT, lambda: ReplayProfileSession(store, drifted, SRC))
+        epoch0 = hub.epoch_of(TGT, "gbdt")
+
+        server = LatencyRPCServer(
+            svc, obs=obs, autopilot=ap,
+            policy=BatchPolicy(max_batch=8, max_wait_ticks=5,
+                               max_queue=1024))
+        host, port = server.start()
+        n = self.THREADS * self.PER
+        errs, epochs_seen = [], set()
+
+        def worker(t):
+            try:
+                with LatencyClient(host, port, timeout=30.0) as c:
+                    for i in range(self.PER):
+                        rep = c.predict_e2e(graphs[(t + i) % len(graphs)],
+                                            TGT)
+                        epochs_seen.add(rep.bank_epoch)
+                        assert rep.e2e_s > 0
+                    assert c.retries == 0
+            except Exception as exc:                     # surfaced post-join
+                errs.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(self.THREADS)]
+        for t in threads:
+            t.start()
+        # Drive the control loop from this thread while the flood runs:
+        # drift in, alert fires, recalibration + rollover land mid-flight.
+        while any(t.is_alive() for t in threads):
+            observe_round(store, svc, obs, drifted)
+            clock.advance(1)
+            ap.step()
+        for t in threads:
+            t.join()
+        assert not errs, errs
+        # Keep stepping until the loop has actually actuated (the flood
+        # may outpace three sustain ticks on a fast box).
+        for _ in range(12):
+            if ap.actions:
+                break
+            observe_round(store, svc, obs, drifted)
+            clock.advance(1)
+            ap.step()
+
+        try:
+            with LatencyClient(host, port, timeout=30.0) as probe:
+                snap = probe.metrics()["snapshot"]
+                out = probe.metrics(timeline=True, audit=True)
+                health = probe.health()
+        finally:
+            server.stop()
+
+        # Closed loop actually closed: epoch advanced, drift back down.
+        assert len(ap.actions) >= 1
+        epoch1 = hub.epoch_of(TGT, "gbdt")
+        assert epoch1 > epoch0
+        assert obs.drift.score() < 1.0
+        assert all(epoch0 <= e <= epoch1 for e in epochs_seen)
+
+        # Conservation across the swap: nothing lost, nothing doubled.
+        c = snap["counters"]
+        submitted = sum(c["rpc_batcher_submitted_total"].values())
+        answered = sum(c["rpc_batcher_answered_total"].values())
+        assert submitted == n
+        assert answered == n
+        assert sum(c.get("rpc_batcher_failed_total", {}).values()) == 0
+        assert sum(c.get("rpc_batcher_rejected_total", {}).values()) == 0
+        assert sum(c["autopilot_actions_total"].values()) == len(ap.actions)
+
+        # The new RPC surfaces: timeline ring + audit log + health status.
+        assert out["timeline"]["samples"] == tl.samples
+        kinds = [e["kind"] for e in out["audit"]]
+        assert "autopilot.rollover" in kinds
+        assert [e["kind"] for e in
+                probe_audit_filter(out["audit"], "alert.fire")]
+        assert health["autopilot"]["actions"] == len(ap.actions)
+        assert health["metrics"]["drift_top"] is None or \
+            health["metrics"]["drift_top"]["setting"] == TGT_KEY
+        assert "autopilot" in snap["collected"]
+        assert snap["collected"]["alerts"]["consumed"] == tl.samples
+
+    def test_metrics_timeline_requires_autopilot(self):
+        srv = LatencyRPCServer(
+            LatencyService(PredictorHub(), default_setting=SRC),
+            obs=Observability(), auto_start_batcher=False)
+        with pytest.raises(RPCError):
+            srv._metrics({"timeline": True})
+        with pytest.raises(RPCError):
+            srv._metrics({"audit": True})
+
+
+def probe_audit_filter(events, kind):
+    return [e for e in events if e["kind"] == kind]

@@ -495,8 +495,10 @@ class TestMetricsEndpoint:
         h = srv._health({})
         m = h["metrics"]
         assert set(m) == {"queued", "flush_p50_s", "flush_p99_s",
-                          "drift_score"}
+                          "drift_score", "drift_top"}
         assert m["queued"] == 0 and m["drift_score"] == 0.0
+        assert m["drift_top"] is None                    # no cells yet
+        assert "autopilot" not in h                      # none attached
 
     def test_prometheus_export_shape(self):
         reg = MetricsRegistry()

@@ -459,8 +459,12 @@ class TestTransferEngine:
         transform) as the target, signatures located in probe graphs."""
         graphs = [tiny_graph("a", ch=4), tiny_graph("b", ch=8)]
         store = ProfileStore()
-        src_sess = ProfileSession(warmup=0, inner=1, repeats=1,
-                                  e2e_inner=1, e2e_repeats=1, store=store)
+        # repeats=3: time_callable takes min-over-repeats, so a single
+        # scheduler hiccup can't inflate one op measurement (with
+        # repeats=1 a ~5ms preemption skews the 2-point overhead fit
+        # negative and the transferred e2e prediction goes < 0).
+        src_sess = ProfileSession(warmup=0, inner=1, repeats=3,
+                                  e2e_inner=1, e2e_repeats=3, store=store)
         for g in graphs:
             src_sess.profile_graph(g, SRC)
         hub = PredictorHub()
@@ -468,7 +472,7 @@ class TestTransferEngine:
 
         target = DeviceSetting("slow2x", "float32", "op_by_op", device="slow2x")
         tgt_sess = ProfileSession(
-            warmup=0, inner=1, repeats=1,
+            warmup=0, inner=1, repeats=3,
             latency_transform=lambda kind, s: 2.0 * s)
         engine = TransferEngine(SRC, target, family="lasso", seed=0,
                                 probe_graphs=graphs)
