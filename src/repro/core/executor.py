@@ -163,13 +163,21 @@ def _apply_fused_tail(node: OpNode, y: Array, extras: List[Array]) -> Array:
     Binary fused ops consume their true second operand from ``extras``
     (appended to node.inputs by the fusion pass, in merge order), so
     fused execution is numerically identical to unfused execution.
+    Kinds marked ``@self`` had a duplicate reference to the producer's
+    output dropped at merge time (diamond collapse); they read the
+    kernel's base output instead — exact when the producer had no fused
+    tail of its own at that merge (see fusion module docstring).
     """
     it = iter(extras)
+    base = y
     for kind in node.fused:
+        self_ref = kind.endswith("@self")
+        if self_ref:
+            kind = kind[:-5]
         if kind in _EW_UNOPS:
             y = _EW_UNOPS[kind](y)
         elif kind in _EW_BINOPS:
-            rhs = next(it, None)
+            rhs = base if self_ref else next(it, None)
             y = _EW_BINOPS[kind](y, y * 0.5 if rhs is None else rhs)
         elif kind in _ACTS:
             y = _ACTS[kind](y)
@@ -336,6 +344,16 @@ def build_op_fn(graph: OpGraph, node: OpNode) -> Tuple[Callable, List[int]]:
 
         def fn(*xs):
             return tail(_ACTS[act](xs[0]), list(xs[n_base:]))
+        return fn, list(node.inputs)
+
+    if t == "resize":
+        out_shape = graph.tensor(node.outputs[0]).shape
+        method = p.get("mode", "nearest")
+
+        def fn(*xs):
+            y = jax.image.resize(xs[0], (xs[0].shape[0],) + tuple(out_shape[1:]),
+                                 method=method)
+            return tail(y, list(xs[n_base:]))
         return fn, list(node.inputs)
 
     raise NotImplementedError(f"executor: op type {t!r} (conv-space executor)")

@@ -110,6 +110,10 @@ _KIND_COST = {
 
 
 def kind_cost(kind) -> float:
+    # "@self" marks a duplicate-operand fused kind (fusion diamond
+    # collapse); the arithmetic — and therefore the cost — is unchanged.
+    if isinstance(kind, str) and "@" in kind:
+        kind = kind.split("@", 1)[0]
     return _KIND_COST.get(kind, 1.5)
 
 
@@ -288,6 +292,19 @@ def _f_pool_max(graph, node):
     names, vals = _pool_features(graph, node)
     _cache_names("pool_max", names)
     return names, vals
+
+
+@register_featurizer("resize")
+def _f_resize(graph, node):
+    x = graph.tensor(node.inputs[0])
+    y = graph.tensor(node.outputs[0])
+    _, ih, iw, ic = _hw(x.shape)
+    _, oh, ow, _ = _hw(y.shape)
+    scale = float(oh) / float(max(1, ih))
+    names = ["input_h", "input_w", "input_c", "output_h", "output_w",
+             "scale", "input_size", "output_size"]
+    _cache_names("resize", names)
+    return names, [ih, iw, ic, oh, ow, scale, x.size, y.size]
 
 
 @register_featurizer("pad")

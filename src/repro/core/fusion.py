@@ -13,6 +13,22 @@ The merged kernel count drives latency prediction on devices that fuse
 We return a new graph of *fusion groups*: each group node keeps the
 non-elementwise "anchor" op type and records the element-wise ops that
 ride along in ``fused``.  Group count == number of dispatched kernels.
+
+Multi-edge consumers (diamond collapse)
+---------------------------------------
+Rule (2) counts consumer *nodes*, not edges.  A consumer that reads
+``out_t`` at several operand positions — which the pass itself creates
+when it collapses a diamond ``A → {B, C} → add`` into a single
+elementwise node with inputs ``(A_out, A_out)`` — is ONE consumer, and
+fusion proceeds when its first use is position 0 (rule 3).  Every
+occurrence of ``out_t`` is dropped from the merged node's inputs (the
+value is produced inside the kernel now); dropped binary operands are
+recorded by suffixing the fused kind with ``@self``, which the executor
+resolves to the kernel's base output.  That is exact when the producer
+had no fused tail of its own at merge time — the canonical diamond —
+and a documented approximation for deeper self-referential stacks.
+The k==0 first-use rule still applies: a consumer whose *first* read of
+``out_t`` is not operand 0 blocks fusion (asserted by regression test).
 """
 from __future__ import annotations
 
@@ -23,6 +39,18 @@ from repro.core.ir import ELEMENTWISE_TYPES, OpGraph, OpNode
 
 # Paper Alg. C.1 Line 23: op types that can be fused into a producer.
 LINKABLE_TYPES: Tuple[str, ...] = ELEMENTWISE_TYPES
+
+# Element-wise kinds that consume a second operand.  Only these can carry
+# the "@self" duplicate-operand marker (see module docstring).
+BINARY_EW_KINDS: Tuple[str, ...] = (
+    "add", "sub", "mul", "div", "maximum", "minimum", "pow",
+    "equal", "greater", "less",
+)
+
+
+def strip_self(kind: str) -> str:
+    """Fused kind without the ``@self`` duplicate-operand marker."""
+    return kind.split("@", 1)[0]
 
 
 def is_linkable(node: OpNode) -> bool:
@@ -93,18 +121,24 @@ def fuse_graph(graph: OpGraph) -> Tuple[List[FusionGroup], OpGraph]:
                 # Graph outputs must materialize; cannot be fused away.
                 new_alive.append(cur)
                 continue
-            # L7-13: find candidate consumers and the input position used.
-            candidates = []
-            cand_index = 0
+            # L7-13: find candidate consumers and the first input position
+            # each uses.  Deduplicated per consumer *node*: the pass's own
+            # diamond collapses produce nodes that read out_t at several
+            # positions, and counting per edge mistook them for fan-out > 1
+            # and silently refused to fuse (see module docstring).
+            cand: Dict[int, Tuple[OpNode, int]] = {}
             for oid, nxt, k in consumers.get(out_t, ()):
                 if oid == cur.op_id or oid in removed:
                     continue
-                cand_index = k
-                candidates.append(nxt)
-            if len(candidates) != 1 or cand_index != 0:  # L14-15
+                if oid not in cand:          # k ascending per node → first use
+                    cand[oid] = (nxt, k)
+            if len(cand) != 1:                           # L14-15
                 new_alive.append(cur)
                 continue
-            nxt = candidates[0]
+            nxt, cand_index = next(iter(cand.values()))
+            if cand_index != 0:                          # L14-15, k==0
+                new_alive.append(cur)
+                continue
             # L17: next input must be ready and next must be linkable.
             # Extension to the paper's letter: ALL of nxt's operands must
             # already be produced at cur's position, or the fused kernel
@@ -117,20 +151,35 @@ def fuse_graph(graph: OpGraph) -> Tuple[List[FusionGroup], OpGraph]:
                 leader = merged_into.get(cur.op_id, cur.op_id)
                 merged_into[nxt.op_id] = leader
                 group_members[leader].extend(group_members.pop(nxt.op_id))
-                # Rewire: cur adopts nxt's outputs and extra inputs.
+                # Rewire: cur adopts nxt's outputs and extra inputs.  Every
+                # occurrence of out_t is dropped (produced inside the kernel
+                # now); dropped binary operands get the "@self" marker.
                 if nxt.op_type == "elementwise":
-                    fused_kinds = [nxt.param("ew_kind", "add")]
+                    own_kind = nxt.param("ew_kind", "add")
                 elif nxt.op_type == "activation":
-                    fused_kinds = [nxt.param("act", "relu")]
+                    own_kind = nxt.param("act", "relu")
                 else:
-                    fused_kinds = [nxt.op_type]
+                    own_kind = nxt.op_type
+                n_base = nxt.param("n_inputs", 1)
+                if (own_kind in BINARY_EW_KINDS
+                        and any(t == out_t for t in nxt.inputs[1:n_base])):
+                    own_kind = own_kind + "@self"
+                tail_kinds: List[str] = []
+                ei = n_base                 # next extra-operand position
+                for kind in nxt.fused:
+                    if strip_self(kind) in BINARY_EW_KINDS and kind == strip_self(kind):
+                        if ei < len(nxt.inputs) and nxt.inputs[ei] == out_t:
+                            kind = kind + "@self"
+                        ei += 1
+                    tail_kinds.append(kind)
                 cur = OpNode(
                     op_id=cur.op_id,
                     op_type=cur.op_type,
-                    inputs=cur.inputs + tuple(t for t in nxt.inputs[1:]),
+                    inputs=cur.inputs + tuple(
+                        t for t in nxt.inputs[1:] if t != out_t),
                     outputs=nxt.outputs,
                     params=cur.params,
-                    fused=cur.fused + tuple(fused_kinds) + nxt.fused,
+                    fused=cur.fused + (own_kind,) + tuple(tail_kinds),
                 )
                 removed.add(nxt.op_id)
                 changed = True

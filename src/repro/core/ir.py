@@ -56,6 +56,7 @@ OP_TYPES = CONV_OPS + (
     "elementwise",       # generic element-wise (params['ew_kind'] in ELEMENTWISE_TYPES)
     "activation",        # separate activation node (TFLite composite acts)
     "channel_shuffle",
+    "resize",            # spatial up/down-sample (encoder-decoder skeletons)
     # --- LM-family op types (TPU extension) ---
     "matmul",            # generic (batched) matmul / dot_general
     "attention",         # full self-attention (naive)

@@ -97,15 +97,21 @@ class BlockGene:
     pool_kind: str = "pool_avg"       # pool only
     n_splits: int = 0                 # split only (0 = conv fallback)
     ew_kinds: Tuple[str, ...] = ()    # split only, one per branch
+    depth: int = 1                    # elastic repeat count (OFA-style)
 
     def to_json(self) -> Dict[str, Any]:
-        return {
+        d = {
             "kind": self.kind, "out_c": self.out_c, "kernel": self.kernel,
             "groups": self.groups, "act": self.act,
             "explicit_pad": self.explicit_pad, "expansion": self.expansion,
             "use_se": self.use_se, "pool_kind": self.pool_kind,
             "n_splits": self.n_splits, "ew_kinds": list(self.ew_kinds),
         }
+        if self.depth != 1:
+            # Emitted only when non-default so pre-elastic genotype digests
+            # (and every checkpoint/golden keyed on them) stay byte-stable.
+            d["depth"] = self.depth
+        return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "BlockGene":
@@ -116,19 +122,28 @@ class BlockGene:
 
 @dataclass(frozen=True)
 class Genotype:
-    """One architecture of the space: block genes + head width."""
+    """One architecture of the space: block genes + head width.
+
+    ``family`` distinguishes the plain block space ("block") from the
+    elastic space ("elastic" — same genes, searched through shrink/grow
+    knob steps and scored by the weight-sharing supernet objective).
+    """
 
     blocks: Tuple[BlockGene, ...]
     head_c: int
+    family: str = "block"
 
     def to_json(self) -> Dict[str, Any]:
-        return {"blocks": [b.to_json() for b in self.blocks],
-                "head_c": self.head_c}
+        d: Dict[str, Any] = {"blocks": [b.to_json() for b in self.blocks],
+                             "head_c": self.head_c}
+        if self.family != "block":
+            d["family"] = self.family
+        return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "Genotype":
         return cls(tuple(BlockGene.from_json(b) for b in d["blocks"]),
-                   int(d["head_c"]))
+                   int(d["head_c"]), family=str(d.get("family", "block")))
 
     def digest(self) -> str:
         """Content hash — the identity search loops key populations on."""
@@ -400,11 +415,32 @@ _BUILDERS = {
 }
 
 
-def decode_genotype(gt: Genotype, cfg: Optional[NASSpaceConfig] = None,
+def _emit_head(g: OpGraph, x: int, head_c: int, cfg: NASSpaceConfig) -> None:
+    """Head: 1×1 conv to C10, global mean, FC to `classes`."""
+    shape = g.tensor(x).shape
+    (x,) = g.add_op(
+        "conv2d", [x], [(shape[0], shape[1], shape[2], head_c)],
+        {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1, "act": "relu"},
+    )
+    (x,) = g.add_op("mean", [x], [(shape[0], head_c)],
+                    {"kernel_h": shape[1], "kernel_w": shape[2]})
+    (x,) = g.add_op("fully_connected", [x], [(shape[0], cfg.classes)], {})
+    g.mark_output(x)
+
+
+def decode_genotype(gt, cfg: Optional[NASSpaceConfig] = None,
                     name: Optional[str] = None) -> OpGraph:
     """Build the genotype's `OpGraph` (deterministic; mildly invalid genes
     — stale group counts, impossible splits — repair to their documented
-    fallbacks rather than raising, so search operators stay total)."""
+    fallbacks rather than raising, so search operators stay total).
+
+    Dispatches on genotype family: block/elastic `Genotype` chains and
+    arbitrary-topology `RandomWiredGenotype` DAGs decode through the same
+    entry point, so every downstream layer (fusion, featurization,
+    serving, search) is family-agnostic.
+    """
+    if isinstance(gt, RandomWiredGenotype):
+        return decode_random_wired(gt, cfg, name)
     cfg = cfg or NASSpaceConfig()
     g = OpGraph(name or f"nas_g{gt.digest()}")
     x = g.add_input((1, cfg.resolution, cfg.resolution, 3))
@@ -413,17 +449,11 @@ def decode_genotype(gt: Genotype, cfg: Optional[NASSpaceConfig] = None,
         builder = _BUILDERS.get(gene.kind)
         if builder is None:
             raise ValueError(f"unknown block kind {gene.kind!r}")
-        x = builder(g, x, gene, stride, cfg)
-    # Head: 1×1 conv to C10, global mean, FC to `classes`.
-    shape = g.tensor(x).shape
-    (x,) = g.add_op(
-        "conv2d", [x], [(shape[0], shape[1], shape[2], gt.head_c)],
-        {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1, "act": "relu"},
-    )
-    (x,) = g.add_op("mean", [x], [(shape[0], gt.head_c)],
-                    {"kernel_h": shape[1], "kernel_w": shape[2]})
-    (x,) = g.add_op("fully_connected", [x], [(shape[0], cfg.classes)], {})
-    g.mark_output(x)
+        # Elastic depth: repeat the block, stride spent on the first
+        # repeat only (OFA-style stacked units sharing one gene).
+        for r in range(max(1, int(gene.depth))):
+            x = builder(g, x, gene, stride if r == 0 else 1, cfg)
+    _emit_head(g, x, gt.head_c, cfg)
     g.validate()
     return g
 
@@ -441,3 +471,343 @@ def sample_architecture(seed: int, cfg: Optional[NASSpaceConfig] = None) -> OpGr
 def sample_dataset(n: int, cfg: Optional[NASSpaceConfig] = None,
                    seed0: int = 0) -> List[OpGraph]:
     return [sample_architecture(seed0 + i, cfg) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Elastic family (OFA-style): bottleneck chains whose kernel / depth /
+# width / expand knobs move one rung at a time under shrink/grow
+# operators (repro.search.encoding) and score against the weight-sharing
+# supernet objective (repro.search.objectives.SupernetQuality).
+# ---------------------------------------------------------------------------
+
+ELASTIC_DEPTHS = (1, 2, 3)
+
+
+def elastic_genotype_from_rng(rng: np.random.Generator,
+                              cfg: Optional[NASSpaceConfig] = None) -> Genotype:
+    """Draw one elastic genotype: every block a bottleneck with independent
+    kernel/depth/expand/width knobs (the OFA search unit)."""
+    cfg = cfg or NASSpaceConfig()
+    genes: List[BlockGene] = []
+    for i in range(cfg.num_blocks):
+        stage = 0 if i < 5 else 1
+        out_c = _rint(rng, *STAGE_CHANNEL_RANGES[stage], cfg.channel_scale)
+        genes.append(BlockGene(
+            "bottleneck", out_c,
+            kernel=int(rng.choice([3, 5, 7])),
+            expansion=int(rng.choice([1, 3, 6])),
+            use_se=bool(rng.random() < 0.5),
+            depth=int(rng.choice(ELASTIC_DEPTHS)),
+        ))
+    head_c = _rint(rng, *HEAD_CHANNEL_RANGE, cfg.channel_scale)
+    return Genotype(tuple(genes), head_c, family="elastic")
+
+
+def sample_elastic_genotype(seed: int,
+                            cfg: Optional[NASSpaceConfig] = None) -> Genotype:
+    return elastic_genotype_from_rng(np.random.default_rng(seed), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Random-wired family ("Exploring Randomly Wired Neural Networks"):
+# per-stage random DAGs sampled from classic graph models — WS
+# (Watts-Strogatz small world), ER (Erdős-Rényi), BA (Barabási-Albert
+# preferential attachment) — DAG-ified by orienting edges low→high
+# node index.  Arbitrary fan-out/fan-in stresses the fusion pass and
+# per-op featurization far harder than chain blocks; optional
+# encoder-decoder skeletons (resize-up + skip concat, U-Net style)
+# cover dense-prediction workloads.
+# ---------------------------------------------------------------------------
+
+RW_MODELS = ("ws", "er", "ba")
+RW_NODE_KINDS = ("sep", "conv", "pool_avg", "pool_max")
+_RW_KIND_P = (0.4, 0.3, 0.15, 0.15)
+
+
+@dataclass
+class RandomWiredConfig:
+    """Generator knobs for `random_wired_genotype`."""
+
+    model: str = "ws"            # "ws" | "er" | "ba" | "mixed"
+    stages: int = 3
+    nodes_per_stage: int = 8
+    ws_k: int = 4                # WS: ring-lattice degree
+    ws_p: float = 0.25           # WS: rewire probability
+    er_p: float = 0.3            # ER: edge probability
+    ba_m: int = 2                # BA: edges per arriving node
+    stem_c: int = 16
+    channel_mult: float = 2.0    # per-stage width growth
+    channel_scale: float = 1.0   # scales stem/stage/head widths
+    encdec_prob: float = 0.0     # fraction of samples with a decoder half
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "model": self.model, "stages": self.stages,
+            "nodes_per_stage": self.nodes_per_stage, "ws_k": self.ws_k,
+            "ws_p": self.ws_p, "er_p": self.er_p, "ba_m": self.ba_m,
+            "stem_c": self.stem_c, "channel_mult": self.channel_mult,
+            "channel_scale": self.channel_scale,
+            "encdec_prob": self.encdec_prob,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "RandomWiredConfig":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class StageGene:
+    """One random DAG stage: nodes, oriented edges (a < b), per-node op."""
+
+    num_nodes: int
+    edges: Tuple[Tuple[int, int], ...]
+    kinds: Tuple[str, ...]
+    kernels: Tuple[int, ...]
+    out_c: int
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"num_nodes": self.num_nodes,
+                "edges": [list(e) for e in self.edges],
+                "kinds": list(self.kinds), "kernels": list(self.kernels),
+                "out_c": self.out_c}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "StageGene":
+        return cls(int(d["num_nodes"]),
+                   tuple((int(a), int(b)) for a, b in d["edges"]),
+                   tuple(d["kinds"]), tuple(int(k) for k in d["kernels"]),
+                   int(d["out_c"]))
+
+
+@dataclass(frozen=True)
+class RandomWiredGenotype:
+    """One random-wired architecture: stage DAGs + stem/head widths."""
+
+    stages: Tuple[StageGene, ...]
+    stem_c: int
+    head_c: int
+    model: str = "ws"
+    encdec: bool = False
+    family: str = "random_wired"
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"family": "random_wired",
+                "stages": [s.to_json() for s in self.stages],
+                "stem_c": self.stem_c, "head_c": self.head_c,
+                "model": self.model, "encdec": self.encdec}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "RandomWiredGenotype":
+        return cls(tuple(StageGene.from_json(s) for s in d["stages"]),
+                   int(d["stem_c"]), int(d["head_c"]),
+                   model=str(d.get("model", "ws")),
+                   encdec=bool(d.get("encdec", False)))
+
+    def digest(self) -> str:
+        blob = json.dumps(self.to_json(), sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def canonical_edges(edges, num_nodes: int) -> Tuple[Tuple[int, int], ...]:
+    """Orient low→high, clamp to range, dedupe, sort — the one canonical
+    representation (mutation products repair through this too)."""
+    out = set()
+    for a, b in edges:
+        a, b = int(a), int(b)
+        if a == b:
+            continue
+        a, b = (a, b) if a < b else (b, a)
+        if 0 <= a and b < num_nodes:
+            out.add((a, b))
+    return tuple(sorted(out))
+
+
+def _ws_edges(rng: np.random.Generator, n: int, k: int, p: float) -> List[Tuple[int, int]]:
+    edges = []
+    for i in range(n):
+        for j in range(1, max(1, k // 2) + 1):
+            b = (i + j) % n
+            if rng.random() < p:
+                b = int(rng.integers(0, n))
+            edges.append((i, b))
+    return edges
+
+
+def _er_edges(rng: np.random.Generator, n: int, p: float) -> List[Tuple[int, int]]:
+    return [(i, j) for i in range(n) for j in range(i + 1, n)
+            if rng.random() < p]
+
+
+def _ba_edges(rng: np.random.Generator, n: int, m: int) -> List[Tuple[int, int]]:
+    m = max(1, min(m, n - 1))
+    edges = []
+    degree = [0] * n
+    for j in range(m, n):   # nodes 0..m-1 seed the graph
+        # Preferential attachment: weight by degree + 1 (so seeds are
+        # reachable before any edges exist).
+        w = np.array([degree[i] + 1.0 for i in range(j)])
+        w = w / w.sum()
+        targets = rng.choice(j, size=min(m, j), replace=False, p=w)
+        for t in targets:
+            edges.append((int(t), j))
+            degree[int(t)] += 1
+            degree[j] += 1
+    return edges
+
+
+def random_wired_genotype(rng: np.random.Generator,
+                          cfg: Optional[RandomWiredConfig] = None
+                          ) -> RandomWiredGenotype:
+    """Draw one random-wired genotype (seed-for-seed deterministic)."""
+    cfg = cfg or RandomWiredConfig()
+    model = cfg.model
+    if model == "mixed":
+        model = str(rng.choice(RW_MODELS))
+    if model not in RW_MODELS:
+        raise ValueError(f"unknown random-wired model {model!r}")
+    stem_c = max(4, int(round(cfg.stem_c * cfg.channel_scale)))
+    stages: List[StageGene] = []
+    for s in range(cfg.stages):
+        n = cfg.nodes_per_stage
+        if model == "ws":
+            raw = _ws_edges(rng, n, cfg.ws_k, cfg.ws_p)
+        elif model == "er":
+            raw = _er_edges(rng, n, cfg.er_p)
+        else:
+            raw = _ba_edges(rng, n, cfg.ba_m)
+        kinds = tuple(str(rng.choice(RW_NODE_KINDS, p=_RW_KIND_P))
+                      for _ in range(n))
+        kernels = tuple(int(rng.choice([3, 5])) for _ in range(n))
+        out_c = max(8, int(round(stem_c * cfg.channel_mult ** (s + 1))))
+        stages.append(StageGene(n, canonical_edges(raw, n), kinds, kernels,
+                                out_c))
+    head_c = _rint(rng, *HEAD_CHANNEL_RANGE, cfg.channel_scale)
+    encdec = bool(rng.random() < cfg.encdec_prob)
+    return RandomWiredGenotype(tuple(stages), stem_c, head_c, model=model,
+                               encdec=encdec)
+
+
+def sample_random_wired(seed: int,
+                        cfg: Optional[RandomWiredConfig] = None
+                        ) -> RandomWiredGenotype:
+    return random_wired_genotype(np.random.default_rng(seed), cfg)
+
+
+def _rw_aggregate(g: OpGraph, tids: List[int]) -> int:
+    """Join fan-in > 1 by a chain of binary adds (the paper-space
+    aggregation node of Xie et al., expressed in linkable ops)."""
+    y = tids[0]
+    shape = g.tensor(y).shape
+    for t in tids[1:]:
+        (y,) = g.add_op("elementwise", [y, t], [shape], {"ew_kind": "add"})
+    return y
+
+
+def _rw_node(g: OpGraph, x: int, kind: str, kernel: int, out_c: int,
+             stride: int) -> int:
+    """One random-wired node: ReLU-op-project unit on its aggregate input."""
+    shape = g.tensor(x).shape
+    in_c = shape[-1]
+    oh, ow = _cdiv(shape[1], stride), _cdiv(shape[2], stride)
+    if kind == "sep":   # depthwise-separable (Xie et al.'s default unit)
+        (y,) = g.add_op(
+            "dwconv2d", [x], [(shape[0], oh, ow, in_c)],
+            {"kernel_h": kernel, "kernel_w": kernel, "stride": stride,
+             "act": "relu"})
+        (y,) = g.add_op(
+            "conv2d", [y], [(shape[0], oh, ow, out_c)],
+            {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1,
+             "act": "relu"})
+        return y
+    if kind == "conv":
+        (y,) = g.add_op(
+            "conv2d", [x], [(shape[0], oh, ow, out_c)],
+            {"kernel_h": kernel, "kernel_w": kernel, "stride": stride,
+             "groups": 1, "act": "relu"})
+        return y
+    pool = kind if kind in ("pool_avg", "pool_max") else "pool_avg"
+    (y,) = g.add_op(
+        pool, [x], [(shape[0], oh, ow, in_c)],
+        {"kernel_h": 3, "kernel_w": 3, "stride": stride})
+    if out_c != in_c:
+        (y,) = g.add_op(
+            "conv2d", [y], [(shape[0], oh, ow, out_c)],
+            {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1})
+    return y
+
+
+def _decode_stage(g: OpGraph, x: int, sg: StageGene, stride: int) -> int:
+    """Decode one stage DAG.  In-degree-0 nodes consume the stage input
+    (and spend the stage stride); fan-in > 1 aggregates by add chains;
+    out-degree-0 nodes join into the stage output."""
+    n = sg.num_nodes
+    in_edges: Dict[int, List[int]] = {j: [] for j in range(n)}
+    out_deg = [0] * n
+    for a, b in sg.edges:
+        in_edges[b].append(a)
+        out_deg[a] += 1
+    outs: Dict[int, int] = {}
+    for j in range(n):
+        srcs = sorted(in_edges[j])
+        if not srcs:
+            xin, s = x, stride
+        else:
+            xin, s = _rw_aggregate(g, [outs[a] for a in srcs]), 1
+        outs[j] = _rw_node(g, xin, sg.kinds[j], sg.kernels[j], sg.out_c, s)
+    tails = [outs[j] for j in range(n) if out_deg[j] == 0]
+    return _rw_aggregate(g, tails)
+
+
+def decode_random_wired(gt: RandomWiredGenotype,
+                        cfg: Optional[NASSpaceConfig] = None,
+                        name: Optional[str] = None) -> OpGraph:
+    """Build a random-wired genotype's `OpGraph`.
+
+    ``encdec`` genotypes add a decoder half: each level resizes ×2 back
+    to the matching encoder stage's resolution, concats the skip, and
+    projects 1×1 — a U-Net skeleton whose skip edges give encoder stage
+    outputs fan-out ≥ 2 on top of the DAG's own arbitrary fan-out.
+    """
+    cfg = cfg or NASSpaceConfig()
+    g = OpGraph(name or f"rw_{gt.digest()}")
+    x = g.add_input((1, cfg.resolution, cfg.resolution, 3))
+    shape = g.tensor(x).shape
+    (x,) = g.add_op(
+        "conv2d", [x], [(shape[0], shape[1], shape[2], gt.stem_c)],
+        {"kernel_h": 3, "kernel_w": 3, "stride": 1, "groups": 1,
+         "act": "relu"})
+    skips: List[int] = []
+    for sg in gt.stages:
+        x = _decode_stage(g, x, sg, stride=2)
+        skips.append(x)
+    if gt.encdec and len(gt.stages) > 1:
+        for level in range(len(gt.stages) - 2, -1, -1):
+            skip = skips[level]
+            sshape = g.tensor(skip).shape
+            cshape = g.tensor(x).shape
+            (x,) = g.add_op(
+                "resize", [x],
+                [(cshape[0], sshape[1], sshape[2], cshape[3])],
+                {"mode": "nearest"})
+            (x,) = g.add_op(
+                "concat", [x, skip],
+                [(sshape[0], sshape[1], sshape[2], cshape[3] + sshape[3])],
+                {"axis": -1})
+            (x,) = g.add_op(
+                "conv2d", [x], [sshape],
+                {"kernel_h": 1, "kernel_w": 1, "stride": 1, "groups": 1,
+                 "act": "relu"})
+    _emit_head(g, x, gt.head_c, cfg)
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Family-agnostic (de)serialization — checkpoints, reports, goldens
+# ---------------------------------------------------------------------------
+
+def genotype_from_json(d: Dict[str, Any]):
+    """Load any genotype family from its `to_json` form."""
+    if d.get("family") == "random_wired":
+        return RandomWiredGenotype.from_json(d)
+    return Genotype.from_json(d)

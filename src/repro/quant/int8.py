@@ -98,6 +98,10 @@ def build_quant_op_fn(graph, node) -> Tuple[Callable, List[int]]:
     def tail(y: Array, extras: List[Array]) -> Array:
         it = iter(extras)
         for kind in node.fused:
+            # "@self" duplicate-operand markers (fusion diamond collapse)
+            # fall back to the running value here — int8 tails are a cost
+            # path, and self-referential operands stay within ACT_SCALE.
+            kind = kind.split("@", 1)[0]
             if kind in ("add", "sub", "maximum", "minimum"):
                 rhs = next(it, None)
                 rhs = rhs if rhs is not None else y

@@ -12,14 +12,23 @@ and measured verification of the final front:
     objectives  — quality proxies, `DeviceBudget`, `LatencyScorer`
     pareto      — incremental non-dominated front, crowding distance
     evolution   — `SearchEngine`, `SearchConfig`, `SearchReport`
+
+Three genotype families share the loop (`SearchConfig.family`): the
+paper's block chains, OFA-style elastic chains (shrink/grow knob steps,
+`SupernetQuality` weight-sharing proxy), and random-wired DAGs
+(WS/ER/BA samplers, stage-wise recombination).
 """
-from repro.search.encoding import (crossover, decode, mutate,
-                                   random_genotype, repair)
+from repro.search.encoding import (crossover, decode, grow, mutate,
+                                   mutate_elastic, mutate_random_wired,
+                                   random_elastic_genotype, random_genotype,
+                                   random_wired, repair, repair_random_wired,
+                                   shrink)
 from repro.search.evolution import (FrontMember, GenStats, SearchConfig,
                                     SearchEngine, SearchReport)
 from repro.search.objectives import (BalancedQuality, DeviceBudget,
                                      FlopsQuality, LatencyScorer, QUALITIES,
-                                     graph_flops, graph_params, make_quality)
+                                     SupernetQuality, graph_flops,
+                                     graph_params, make_quality)
 from repro.search.pareto import (ParetoFront, crowding_distance, dominates,
                                  nondominated_rank)
 
@@ -27,7 +36,11 @@ __all__ = [
     "BalancedQuality", "DeviceBudget", "FlopsQuality", "FrontMember",
     "GenStats",
     "LatencyScorer", "ParetoFront", "QUALITIES", "SearchConfig",
-    "SearchEngine", "SearchReport", "crossover", "crowding_distance",
-    "decode", "dominates", "graph_flops", "graph_params", "make_quality",
-    "mutate", "nondominated_rank", "random_genotype", "repair",
+    "SearchEngine", "SearchReport", "SupernetQuality", "crossover",
+    "crowding_distance",
+    "decode", "dominates", "graph_flops", "graph_params", "grow",
+    "make_quality",
+    "mutate", "mutate_elastic", "mutate_random_wired", "nondominated_rank",
+    "random_elastic_genotype", "random_genotype", "random_wired", "repair",
+    "repair_random_wired", "shrink",
 ]

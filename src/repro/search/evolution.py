@@ -38,7 +38,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.nas_space import Genotype, NASSpaceConfig
+from repro.core.nas_space import (Genotype, NASSpaceConfig, RandomWiredConfig,
+                                  genotype_from_json)
 from repro.core.profiler import DeviceSetting, ProfileSession
 from repro.search import encoding
 from repro.search.objectives import DeviceBudget, LatencyScorer, make_quality
@@ -65,13 +66,18 @@ class SearchConfig:
     front_capacity: Optional[int] = None
     resolution: int = 32
     channel_scale: float = 1.0
+    family: str = "block"          # "block" | "elastic" | "random_wired"
+    rw: Optional[Dict[str, Any]] = None   # RandomWiredConfig.to_json overrides
 
     def space(self) -> NASSpaceConfig:
         return NASSpaceConfig(resolution=self.resolution,
                               channel_scale=self.channel_scale)
 
+    def rw_space(self) -> RandomWiredConfig:
+        return RandomWiredConfig(**(self.rw or {}))
+
     def to_json(self) -> Dict[str, Any]:
-        return {
+        d = {
             "population_size": self.population_size,
             "generations": self.generations,
             "children_per_gen": self.children_per_gen,
@@ -83,6 +89,13 @@ class SearchConfig:
             "resolution": self.resolution,
             "channel_scale": self.channel_scale,
         }
+        # Emitted only when non-default so pre-family checkpoint/report
+        # JSON (and goldens pinned on it) stays byte-stable.
+        if self.family != "block":
+            d["family"] = self.family
+        if self.rw is not None:
+            d["rw"] = dict(self.rw)
+        return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "SearchConfig":
@@ -205,7 +218,7 @@ class SearchReport:
         cfg = SearchConfig.from_json(self.config).space()
         rows = []
         for m in self.front:
-            g = encoding.decode(Genotype.from_json(m.genotype), cfg)
+            g = encoding.decode(genotype_from_json(m.genotype), cfg)
             measured = session.profile_graph(g, setting).e2e_s
             predicted = m.latencies.get(skey)
             rows.append({"digest": m.digest, "predicted_s": predicted,
@@ -240,6 +253,15 @@ class SearchEngine:
         self.stats: List[GenStats] = []
         self.wall_time_s = 0.0
 
+    # -- seeding --------------------------------------------------------------
+    def _seed_genotype(self):
+        """One seed draw from the configured genotype family."""
+        if self.cfg.family == "random_wired":
+            return encoding.random_wired(self.rng, self.cfg.rw_space())
+        if self.cfg.family == "elastic":
+            return encoding.random_elastic_genotype(self.rng, self.space)
+        return encoding.random_genotype(self.rng, self.space)
+
     # -- scoring --------------------------------------------------------------
     def _register(self, gt: Genotype) -> str:
         d = gt.digest()
@@ -265,10 +287,14 @@ class SearchEngine:
         lats = self.scorer.score(graphs)
         feas = self.scorer.feasible_mask(lats)
         viol = self.scorer.violation(lats)
+        # Genotype-scored proxies (SupernetQuality: weight sharing is
+        # defined over knobs, not the flat op list) take the genotype.
+        on_genotype = getattr(self.quality_fn, "needs_genotype", False)
         for i, d in enumerate(new):
+            q_arg = self.genotypes[d] if on_genotype else graphs[i]
             self.memo[d] = {
                 "lat": {k: float(lats[k][i]) for k in self.scorer.keys},
-                "quality": float(self.quality_fn(graphs[i])),
+                "quality": float(self.quality_fn(q_arg)),
                 "feasible": bool(feas[i]),
                 "violation": float(viol[i]),
             }
@@ -317,7 +343,7 @@ class SearchEngine:
         t0 = time.perf_counter()
         if self.generation == 0 and not self.population:
             while len(self.population) < self.cfg.population_size:
-                gt = encoding.random_genotype(self.rng, self.space)
+                gt = self._seed_genotype()
                 self.population.append(self._register(gt))
             produced = list(self.population)
         else:
@@ -441,7 +467,7 @@ class SearchEngine:
         eng.generation = int(state["generation"])
         eng.rng.bit_generator.state = state["rng_state"]
         eng.population = list(state["population"])
-        eng.genotypes = {d: Genotype.from_json(g)
+        eng.genotypes = {d: genotype_from_json(g)
                          for d, g in state["genotypes"].items()}
         eng.memo = dict(state["memo"])
         eng.front = ParetoFront.from_json(state["front"])

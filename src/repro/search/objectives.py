@@ -76,9 +76,62 @@ class BalancedQuality:
         return float(flops - self.param_weight * params)
 
 
+class SupernetQuality:
+    """Weight-sharing supernet accuracy proxy for elastic populations.
+
+    A deterministic stand-in for an OFA-style trained supernet, replacing
+    the flops proxy (which rewards raw capacity and cannot rank two
+    subnets of the same macro-skeleton).  Each block of the supernet
+    carries a seeded per-knob importance profile; a subnet's quality is
+    the fraction of supernet weight mass its knob settings inherit.
+    Knobs are nested the way weight sharing nests them — kernel 3 ⊂ 5 ⊂ 7
+    center crops, depth prefixes, expansion/width channel sorts — so
+    quality is monotone non-decreasing in every knob with seeded
+    diminishing returns per block, the partial order a trained
+    weight-sharing supernet exhibits.
+
+    Scores the *genotype* (``needs_genotype``), not the decoded graph:
+    weight sharing is defined over knobs, which the flat op list no
+    longer exposes.
+    """
+
+    name = "supernet"
+    needs_genotype = True
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+
+    def _coeffs(self, block_index: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed * 1000003 + block_index)
+        return rng.uniform(0.5, 2.0, size=4)   # per-knob saturation rates
+
+    @staticmethod
+    def _cover(frac: float, rate: float) -> float:
+        """Importance mass covered by keeping ``frac`` of a knob's range
+        under a sorted-importance profile (saturating, normalized)."""
+        return float((1.0 - np.exp(-rate * frac)) / (1.0 - np.exp(-rate)))
+
+    def __call__(self, gt) -> float:
+        if isinstance(gt, OpGraph):
+            raise TypeError("SupernetQuality scores genotypes, not graphs "
+                            "(needs_genotype=True)")
+        total = 0.0
+        for i, gene in enumerate(gt.blocks):
+            ck, cd, ce, cw = self._coeffs(i)
+            lo, hi = (8, 80) if i < 5 else (80, 400)
+            k_frac = (gene.kernel ** 2) / 49.0          # taps kept of 7×7
+            d_frac = min(max(int(gene.depth), 1), 3) / 3.0
+            e_frac = min(gene.expansion, 6) / 6.0
+            w_frac = min(max(gene.out_c / max(1.0, float(hi)), lo / hi), 1.0)
+            total += (self._cover(k_frac, ck) * self._cover(d_frac, cd)
+                      * self._cover(e_frac, ce) * self._cover(w_frac, cw))
+        return total / max(1, len(gt.blocks))
+
+
 QUALITIES: Dict[str, Callable[[], QualityProxy]] = {
     "flops": FlopsQuality,
     "balanced": BalancedQuality,
+    "supernet": SupernetQuality,
 }
 
 

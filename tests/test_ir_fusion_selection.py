@@ -97,6 +97,86 @@ class TestFusion:
         assert len(groups) == 2
 
 
+class TestDiamondFusion:
+    """Regression: fan-out > 1 must not block fusion when every consumer
+    edge lands on the SAME node (diamond collapse via the "@self"
+    duplicate-operand convention)."""
+
+    @staticmethod
+    def _diamond():
+        # x → conv → sqrt → add(sqrt_out, conv_out): after sqrt merges
+        # into add, conv's output feeds one node through TWO edges.
+        g = OpGraph("diamond")
+        x0 = g.add_input((1, 4, 4, 8))
+        (c1,) = g.add_op("conv2d", [x0], [(1, 4, 4, 8)],
+                         {"kernel_h": 1, "kernel_w": 1, "stride": 1,
+                          "groups": 1})
+        (s1,) = g.add_op("elementwise", [c1], [(1, 4, 4, 8)],
+                         {"ew_kind": "sqrt"})
+        (a1,) = g.add_op("elementwise", [s1, c1], [(1, 4, 4, 8)],
+                         {"ew_kind": "add"})
+        g.mark_output(a1)
+        g.validate()
+        return g
+
+    def test_diamond_collapses_to_single_kernel(self):
+        groups, fused = fuse_graph(self._diamond())
+        assert len(groups) == 1
+        node = fused.nodes[0]
+        assert node.op_type == "conv2d"
+        assert node.fused == ("sqrt", "add@self")
+        assert node.inputs == (0,)       # residual edge folded away
+        fused.validate()
+        # Idempotent: re-fusing the collapsed graph changes nothing.
+        _, again = fuse_graph(fused)
+        assert [n.fused for n in again.nodes] == [n.fused for n in fused.nodes]
+        assert [n.inputs for n in again.nodes] == \
+            [n.inputs for n in fused.nodes]
+
+    def test_diamond_execution_parity(self):
+        from repro.core.executor import GraphExecutor
+        g = self._diamond()
+        _, fused = fuse_graph(g)
+        ex = GraphExecutor(g, "op_by_op")
+        ex_f = GraphExecutor(fused, "op_by_op")
+        x = ex.example_inputs()
+        np.testing.assert_allclose(np.asarray(ex(*x)[0]),
+                                   np.asarray(ex_f(*x)[0]),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_duplicate_operand_binop_merges(self):
+        # add(c, c): both operands are the producer's output directly.
+        g = OpGraph("dup")
+        x0 = g.add_input((1, 4, 4, 8))
+        (c1,) = g.add_op("conv2d", [x0], [(1, 4, 4, 8)],
+                         {"kernel_h": 1, "kernel_w": 1, "stride": 1,
+                          "groups": 1})
+        (a1,) = g.add_op("elementwise", [c1, c1], [(1, 4, 4, 8)],
+                         {"ew_kind": "add"})
+        g.mark_output(a1)
+        groups, fused = fuse_graph(g)
+        assert len(groups) == 1
+        assert fused.nodes[0].fused == ("add@self",)
+        assert fused.nodes[0].inputs == (0,)
+
+    def test_distinct_consumer_nodes_still_block(self):
+        # Two different consumer NODES (not edges) must keep blocking —
+        # the diamond fix dedupes edges per node, nothing more.
+        g = OpGraph("fan")
+        x0 = g.add_input((1, 4, 4, 8))
+        (c1,) = g.add_op("conv2d", [x0], [(1, 4, 4, 8)],
+                         {"kernel_h": 1, "kernel_w": 1, "stride": 1,
+                          "groups": 1})
+        (e1,) = g.add_op("elementwise", [c1], [(1, 4, 4, 8)],
+                         {"ew_kind": "abs"})
+        g.mark_output(e1)
+        (e2,) = g.add_op("elementwise", [c1], [(1, 4, 4, 8)],
+                         {"ew_kind": "neg"})
+        g.mark_output(e2)
+        groups, _ = fuse_graph(g)
+        assert len(groups) == 3
+
+
 class TestSelection:
     def _conv(self, in_c, out_c, hw, k=3, stride=1, groups=1):
         g = OpGraph("t")

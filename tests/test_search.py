@@ -10,21 +10,26 @@ device.  Everything runs on the deterministic cost-model session — no
 wall-clock measurement anywhere.
 """
 import json
+import os
 
 import numpy as np
 import pytest
 
 from repro.core.dataset import synthetic_graphs
-from repro.core.nas_space import (Genotype, NASSpaceConfig, decode_genotype,
+from repro.core.nas_space import (Genotype, NASSpaceConfig,
+                                  RandomWiredConfig, RandomWiredGenotype,
+                                  decode_genotype, genotype_from_json,
                                   genotype_from_rng, sample_architecture,
-                                  sample_genotype)
+                                  sample_elastic_genotype, sample_genotype,
+                                  sample_random_wired)
 from repro.core.profiler import DeviceSetting
 from repro.pipeline import LatencyService, PredictorHub, ProfileStore
 from repro.search import (DeviceBudget, LatencyScorer, ParetoFront,
                           SearchConfig, SearchEngine, crossover,
                           crowding_distance, dominates, graph_flops,
-                          graph_params, make_quality, mutate,
-                          nondominated_rank, random_genotype, repair)
+                          graph_params, grow, make_quality, mutate,
+                          mutate_elastic, nondominated_rank, random_genotype,
+                          repair, shrink)
 from repro.search.encoding import decode
 from repro.transfer import (CostModelProfileSession, ReplayProfileSession,
                             SyntheticDevice, TransferEngine)
@@ -400,3 +405,174 @@ class TestPredictMulti:
         single = svc.predict_batch(graphs, TARGET)
         assert [r.e2e_s for r in multi["sim:float32/op_by_op"]] == \
             [r.e2e_s for r in single]
+
+# ---------------------------------------------------------------------------
+# Genotype families: elastic knobs, random-wired DAGs, golden fingerprints
+# ---------------------------------------------------------------------------
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "randwired_fingerprints.json")
+
+
+@pytest.fixture(scope="module")
+def served_rw():
+    """Service whose bank has seen random-wired op types (elementwise
+    joins, concat/resize from encoder-decoder skeletons) — chains alone
+    don't cover them."""
+    golden = json.load(open(GOLDEN))
+    rwc = RandomWiredConfig(**golden["rw_config"])
+    store = ProfileStore()
+    session = CostModelProfileSession(store=store, seed=3)
+    graphs = synthetic_graphs(8, resolution=16)
+    graphs += [decode_genotype(sample_random_wired(s, rwc), SPACE)
+               for s in range(4)]
+    for g in graphs:
+        session.profile_graph(g, SOURCE)
+    hub = PredictorHub()
+    hub.train(store, SOURCE, "gbdt", hparams={"n_stages": 20}, min_samples=3)
+    svc = LatencyService(hub, default_setting=SOURCE, predictor="gbdt")
+    e2e = [store.get_arch(SOURCE, g.fingerprint()).e2e_s for g in graphs]
+    return {"service": svc, "budget_s": float(np.median(e2e)), "rwc": rwc}
+
+
+class TestGoldenFingerprints:
+    """Differential decode: 200 seeded genotypes pinned by golden file.
+
+    Any drift in the samplers, serialization, or decoders shows up as a
+    digest/fingerprint mismatch against `tests/golden/`."""
+
+    @pytest.fixture(scope="class")
+    def golden(self):
+        return json.load(open(GOLDEN))
+
+    def test_random_wired_pinned(self, golden):
+        rwc = RandomWiredConfig(**golden["rw_config"])
+        space = NASSpaceConfig(**golden["space"])
+        assert len(golden["random_wired"]) == 120
+        for seed, (digest, fp) in sorted(golden["random_wired"].items(),
+                                         key=lambda kv: int(kv[0])):
+            gt = sample_random_wired(int(seed), rwc)
+            assert gt.digest() == digest, f"rw seed {seed}: digest drift"
+            clone = genotype_from_json(json.loads(json.dumps(gt.to_json())))
+            assert clone == gt
+            g = decode_genotype(clone, space)
+            assert g.fingerprint() == fp, f"rw seed {seed}: decode drift"
+
+    def test_elastic_pinned(self, golden):
+        space = NASSpaceConfig(**golden["space"])
+        assert len(golden["elastic"]) == 80
+        for seed, (digest, fp) in sorted(golden["elastic"].items(),
+                                         key=lambda kv: int(kv[0])):
+            gt = sample_elastic_genotype(int(seed), space)
+            assert gt.digest() == digest, f"elastic seed {seed}: digest drift"
+            clone = genotype_from_json(json.loads(json.dumps(gt.to_json())))
+            assert clone == gt and clone.family == "elastic"
+            g = decode_genotype(clone, space)
+            assert g.fingerprint() == fp, f"elastic seed {seed}: decode drift"
+
+    def test_some_golden_graph_has_wide_fanout(self, golden):
+        rwc = RandomWiredConfig(**golden["rw_config"])
+        space = NASSpaceConfig(**golden["space"])
+        best = 0
+        for seed in range(20):
+            g = decode_genotype(sample_random_wired(seed, rwc), space)
+            fanout = {}
+            for n in g.nodes:
+                for t in n.inputs:
+                    fanout[t] = fanout.get(t, 0) + 1
+            best = max(best, max(fanout.values()))
+        assert best >= 3
+
+
+class TestElasticFamily:
+    def test_shrink_grow_deterministic_and_single_knob(self):
+        gt = sample_elastic_genotype(5, SPACE)
+        assert gt.family == "elastic"
+        for op in (shrink, grow, mutate_elastic):
+            a = op(gt, np.random.default_rng(3), SPACE)
+            b = op(gt, np.random.default_rng(3), SPACE)
+            assert a == b and a.family == "elastic"
+        small = shrink(gt, np.random.default_rng(3), SPACE)
+        # Exactly one block differs, and within it at most one knob
+        # moved (repair may not touch the others: same macro-skeleton).
+        diff = [i for i, (x, y) in enumerate(zip(gt.blocks, small.blocks))
+                if x != y]
+        assert len(diff) <= 1
+        if diff:
+            x, y = gt.blocks[diff[0]], small.blocks[diff[0]]
+            changed = sum(getattr(x, k) != getattr(y, k)
+                          for k in ("kernel", "depth", "expansion", "out_c"))
+            assert changed == 1
+
+    def test_supernet_quality_needs_genotype(self):
+        q = make_quality("supernet")
+        assert getattr(q, "needs_genotype", False)
+        gt = sample_elastic_genotype(2, SPACE)
+        assert 0.0 < q(gt) <= 1.0
+        with pytest.raises(TypeError, match="genotypes"):
+            q(decode_genotype(gt, SPACE))
+
+    def test_elastic_mutate_dispatch(self):
+        gt = sample_elastic_genotype(9, SPACE)
+        out = mutate(gt, np.random.default_rng(1), SPACE)
+        assert out.family == "elastic"
+        assert repair(out, SPACE) == out
+
+    def test_elastic_search_deterministic_with_resume(self, served_rw,
+                                                      tmp_path):
+        budgets = [DeviceBudget(SOURCE, served_rw["budget_s"] * 4)]
+        cfg = small_config(population_size=8, generations=4,
+                           children_per_gen=6, seed=17, family="elastic",
+                           quality="supernet")
+        r1 = SearchEngine(served_rw["service"], budgets, cfg).run()
+        r2 = SearchEngine(served_rw["service"], budgets, cfg).run()
+        assert r1.front_json() == r2.front_json()
+        assert len(r1.front) > 0
+        for m in r1.front:
+            gt = genotype_from_json(m.genotype)
+            assert gt.family == "elastic"
+        path = str(tmp_path / "elastic.json")
+        eng = SearchEngine(served_rw["service"], budgets, cfg)
+        eng.step(); eng.step()
+        eng.save(path)
+        resumed = SearchEngine.load(path, served_rw["service"]).run()
+        assert resumed.front_json() == r1.front_json()
+
+
+class TestRandomWiredFamily:
+    def test_mutate_crossover_dispatch_and_family_guard(self):
+        rng = np.random.default_rng(0)
+        a = sample_random_wired(1, RandomWiredConfig(nodes_per_stage=5))
+        b = sample_random_wired(2, RandomWiredConfig(nodes_per_stage=5))
+        m = mutate(a, rng, SPACE)
+        assert isinstance(m, RandomWiredGenotype)
+        assert repair(m, SPACE) == m
+        c = crossover(a, b, np.random.default_rng(4), SPACE)
+        assert isinstance(c, RandomWiredGenotype)
+        assert crossover(a, b, np.random.default_rng(4), SPACE) == c
+        with pytest.raises(ValueError, match="families"):
+            crossover(a, sample_genotype(0, SPACE), rng, SPACE)
+
+    def test_random_wired_search_deterministic_with_resume(self, served_rw,
+                                                           tmp_path):
+        budgets = [DeviceBudget(SOURCE, served_rw["budget_s"] * 20)]
+        cfg = small_config(population_size=8, generations=4,
+                           children_per_gen=6, seed=29,
+                           family="random_wired",
+                           rw=served_rw["rwc"].to_json())
+        r1 = SearchEngine(served_rw["service"], budgets, cfg).run()
+        r2 = SearchEngine(served_rw["service"], budgets, cfg).run()
+        assert r1.front_json() == r2.front_json()
+        assert len(r1.front) > 0
+        for m in r1.front:
+            gt = genotype_from_json(m.genotype)
+            assert isinstance(gt, RandomWiredGenotype)
+        path = str(tmp_path / "rw.json")
+        eng = SearchEngine(served_rw["service"], budgets, cfg)
+        eng.step(); eng.step()
+        eng.save(path)
+        resumed = SearchEngine.load(path, served_rw["service"]).run()
+        assert resumed.front_json() == r1.front_json()
+        # Config JSON for a random-wired run round-trips its rw knobs.
+        saved = json.load(open(path))
+        assert saved["config"]["family"] == "random_wired"
